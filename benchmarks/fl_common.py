@@ -1,0 +1,116 @@
+"""Shared harness for the paper-reproduction benchmarks.
+
+Protocol = the paper's (§4), at laptop scale on the synthetic task ladder:
+100 clients (60 in quick mode), 10% participation, E=1 local epoch
+(K = n_i/b steps), FedAvg server unless stated. Step sizes for the
+baseline optimizers are grid-searched on ONE task (medium, α=0.1) and then
+*reused everywhere* — exactly the transfer protocol whose failure mode
+Δ-SGD is designed to avoid. Δ-SGD always runs with the paper defaults
+γ=2, η0=0.2, θ0=1, δ=0.1 — no tuning, ever.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_tasks import CNN_PAPER, MLP_SMALL, MLP_WIDE
+from repro.core import (get_client_opt, get_server_opt, init_fl_state,
+                        make_fl_round, make_loss)
+from repro.data.pipeline import FederatedDataset
+from repro.data.synthetic import get_task
+from repro.models.small import accuracy, make_small_model, softmax_ce
+
+# paper grids (§4 Hyperparameters)
+GRIDS = {
+    "sgd": [0.01, 0.05, 0.1, 0.5],
+    "sgd_decay": [0.01, 0.05, 0.1, 0.5],
+    "sgdm": [0.01, 0.05, 0.1, 0.5],
+    "sgdm_decay": [0.01, 0.05, 0.1, 0.5],
+    "adam": [0.001, 0.01, 0.1],
+    "adagrad": [0.001, 0.01, 0.1],
+    "sps": [None],          # official defaults (c=0.5, f*=0)
+    "delta_sgd": [None],    # paper defaults, never tuned
+}
+
+MODELS = {"mlp": MLP_SMALL, "mlp-wide": MLP_WIDE, "cnn": CNN_PAPER}
+
+
+@functools.lru_cache(maxsize=32)
+def _fed(task_id: str, alpha: float, num_clients: int, seed: int,
+         variable_sizes: bool = False):
+    task = get_task(task_id, seed=seed)
+    vs = None
+    if variable_sizes:
+        vs = np.random.default_rng(seed + 5).integers(100, 501, num_clients)
+    return FederatedDataset.build(task, num_clients=num_clients, alpha=alpha,
+                                  samples_per_client=500, seed=seed,
+                                  variable_sizes=vs)
+
+
+def run_fl(opt_name: str, task_id: str, *, alpha: float = 0.1,
+           rounds: int = 60, lr: Optional[float] = None,
+           model: str = "mlp", server: str = "fedavg",
+           fedprox_mu: float = 0.0, delta: float = 0.1,
+           local_epochs: int = 1, batch: int = 64, num_clients: int = 60,
+           participation: float = 0.1, weighted: bool = False,
+           variable_sizes: bool = False, seed: int = 0) -> Dict:
+    """One FL training run; returns final test accuracy + timing."""
+    fed = _fed(task_id, alpha, num_clients, seed, variable_sizes)
+    init_fn, logits_fn = make_small_model(MODELS[model])
+    loss_fn = make_loss(
+        lambda p, b: (softmax_ce(logits_fn(p, b["x"]), b["y"]), {}),
+        fedprox_mu=fedprox_mu)
+    kw = {}
+    if lr is not None:
+        kw["lr"] = lr
+    if opt_name == "delta_sgd":
+        kw["delta"] = delta
+    copt = get_client_opt(opt_name, **kw)
+    sopt = get_server_opt(server)
+    rnd = jax.jit(make_fl_round(loss_fn, copt, sopt, num_rounds=rounds,
+                                weighted=weighted))
+    state = init_fl_state(init_fn(jax.random.key(seed)), sopt)
+    K = fed.epoch_steps(batch) * local_epochs
+    t0 = time.time()
+    metrics = {}
+    for t in range(rounds):
+        batches, w, _ = fed.sample_round(participation, K, batch)
+        state, metrics, _ = rnd(
+            state, {"x": jnp.asarray(batches["x"]),
+                    "y": jnp.asarray(batches["y"])},
+            client_weights=jnp.asarray(w) if weighted else None)
+    wall = time.time() - t0
+    xt, yt = fed.test_batch(2000)
+    acc = float(accuracy(logits_fn(state.params, jnp.asarray(xt)),
+                         jnp.asarray(yt)))
+    return {"acc": acc, "wall_s": wall, "us_per_round": wall / rounds * 1e6,
+            "eta": float(metrics.get("eta_mean", 0.0)),
+            "loss": float(metrics.get("loss", np.nan))}
+
+
+_TUNED: Dict[str, Optional[float]] = {}
+
+
+def tuned_lrs(rounds: int = 40, seed: int = 0) -> Dict[str, Optional[float]]:
+    """Grid-search every baseline on the tuning task (medium, α=0.1, MLP —
+    the task where baselines actually converge, mirroring the paper's
+    choice of CIFAR-10/ResNet-18 as the tuning anchor)."""
+    if _TUNED:
+        return _TUNED
+    for opt, grid in GRIDS.items():
+        best_lr, best_acc = None, -1.0
+        for lr in grid:
+            acc = run_fl(opt, "medium", alpha=0.1, rounds=rounds, lr=lr,
+                         seed=seed)["acc"]
+            if acc > best_acc:
+                best_acc, best_lr = acc, lr
+        _TUNED[opt] = best_lr
+    return _TUNED
+
+
+OPTS = list(GRIDS)

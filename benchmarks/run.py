@@ -1,0 +1,193 @@
+"""Benchmark harness — one function per paper table/figure, each emitting
+``name,us_per_call,derived`` CSV rows (us_per_call = wall-µs per FL round;
+derived = final test accuracy unless stated).
+
+  table1   : optimizer × task × α grid (paper Table 1)
+  table2b  : FedProx loss, α=0.01 (paper Table 2b)
+  table3   : variable local dataset sizes + weighted FedAvg (paper Table 3)
+  table4   : FedAdam server (paper Table 4)
+  fig4     : Δ-SGD δ-sensitivity (paper Fig. 4)
+  fig5     : local epochs E ∈ {1,2,3} (paper Fig. 5)
+  convex   : Thm 5 numeric check (derived = final distance² / initial)
+  kernels  : per-kernel µs/call in interpret mode (derived = max |err| vs
+             the ref oracle — correctness, not TPU wall time)
+
+Full protocol details: benchmarks/fl_common.py. Run everything:
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only table1,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+ROWS = []
+
+
+def emit(name, us, derived):
+    row = f"{name},{us:.1f},{derived:.4f}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def table1(rounds):
+    from benchmarks.fl_common import OPTS, run_fl, tuned_lrs
+    lrs = tuned_lrs(rounds=min(rounds, 40))
+    for task in ("easy", "medium", "hard"):
+        for alpha in (1.0, 0.1, 0.01):
+            for opt in OPTS:
+                r = run_fl(opt, task, alpha=alpha, rounds=rounds,
+                           lr=lrs[opt])
+                emit(f"table1/{task}/alpha{alpha}/{opt}",
+                     r["us_per_round"], r["acc"])
+
+
+def table2b(rounds):
+    from benchmarks.fl_common import OPTS, run_fl, tuned_lrs
+    lrs = tuned_lrs(rounds=min(rounds, 40))
+    for opt in OPTS:
+        r = run_fl(opt, "medium", alpha=0.01, rounds=rounds, lr=lrs[opt],
+                   fedprox_mu=0.1)
+        emit(f"table2b/fedprox/medium/alpha0.01/{opt}", r["us_per_round"],
+             r["acc"])
+
+
+def table3(rounds):
+    from benchmarks.fl_common import run_fl, tuned_lrs
+    lrs = tuned_lrs(rounds=min(rounds, 40))
+    for opt in ("sgd", "sgdm", "adam", "adagrad", "sps", "delta_sgd"):
+        r = run_fl(opt, "medium", alpha=0.1, rounds=rounds, lr=lrs[opt],
+                   variable_sizes=True, weighted=True)
+        emit(f"table3/varsizes/medium/{opt}", r["us_per_round"], r["acc"])
+
+
+def table4(rounds):
+    from benchmarks.fl_common import OPTS, run_fl, tuned_lrs
+    lrs = tuned_lrs(rounds=min(rounds, 40))
+    for opt in OPTS:
+        r = run_fl(opt, "medium", alpha=0.1, rounds=rounds, lr=lrs[opt],
+                   server="fedadam")
+        emit(f"table4/fedadam/medium/{opt}", r["us_per_round"], r["acc"])
+
+
+def fig4(rounds):
+    from benchmarks.fl_common import run_fl
+    for delta in (0.01, 0.1, 1.0):
+        for task in ("easy", "medium"):
+            r = run_fl("delta_sgd", task, alpha=0.1, rounds=rounds,
+                       delta=delta)
+            emit(f"fig4/delta{delta}/{task}", r["us_per_round"], r["acc"])
+
+
+def fig5(rounds):
+    from benchmarks.fl_common import run_fl
+    for E in (1, 2, 3):
+        r = run_fl("delta_sgd", "medium", alpha=0.1, rounds=rounds,
+                   local_epochs=E)
+        emit(f"fig5/epochs{E}/medium", r["us_per_round"], r["acc"])
+
+
+def convex(rounds=40):
+    """Thm 5 numeric check on interpolation least squares."""
+    sys.path.insert(0, "tests")
+    from test_theory import _make_problem, _gi
+    m, d = 4, 6
+    As, bs, x_star = _make_problem(m, d)
+    x = np.zeros(d, np.float32)
+    xs_i = [x.copy() for _ in range(m)]
+    xs_prev = [x.copy() for _ in range(m)]
+    etas, thetas = [0.05] * m, [0.0] * m
+    gs_prev = [_gi(As[i], bs[i], x) for i in range(m)]
+    t0 = time.time()
+    v0 = float(np.sum(x_star ** 2))
+    v = v0
+    for t in range(rounds):
+        nxt, ne, nt = [], [], []
+        for i in range(m):
+            g = _gi(As[i], bs[i], xs_i[i])
+            dg = np.linalg.norm(g - gs_prev[i])
+            dx = np.linalg.norm(xs_i[i] - xs_prev[i])
+            eta = min(dx / (2 * dg) if dg > 0 else np.inf,
+                      np.sqrt(1 + thetas[i]) * etas[i])
+            nxt.append(xs_i[i] - eta * g)
+            nt.append(eta / etas[i])
+            ne.append(eta)
+            gs_prev[i] = g
+        xs_prev, xs_i, etas, thetas = xs_i, nxt, ne, nt
+        xm = np.mean(xs_i, axis=0)
+        v = float(np.sum((xm - x_star) ** 2))
+    emit("convex/dist_ratio_T40", (time.time() - t0) / rounds * 1e6, v / v0)
+
+
+def kernels():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.delta_sgd import delta_sgd as dk, ref as dref
+    from repro.kernels.flash_attention.flash_attention import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.kernels.mamba2_scan.ops import ssd_scan
+    from repro.kernels.mamba2_scan.ref import ssd_ref
+    rng = np.random.default_rng(0)
+
+    def timeit(fn, *a, n=3):
+        fn(*a)
+        t0 = time.time()
+        for _ in range(n):
+            out = fn(*a)
+        jax.block_until_ready(out)
+        return (time.time() - t0) / n * 1e6, out
+
+    g = jnp.asarray(rng.normal(size=(1 << 16,)), jnp.float32)
+    gp = jnp.asarray(rng.normal(size=(1 << 16,)), jnp.float32)
+    us, out = timeit(lambda a, b: dk.norms(a, b, interpret=True), g, gp)
+    err = abs(float(out[0]) - float(dref.norms_ref(g, gp)[0]))
+    emit("kernels/delta_sgd_norms_64k", us, err)
+
+    q = jnp.asarray(rng.normal(size=(1, 256, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 256, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 256, 2, 64)), jnp.float32)
+    us, out = timeit(lambda a, b, c: flash_attention(
+        a, b, c, block_q=64, block_k=64, interpret=True), q, k, v)
+    err = float(jnp.max(jnp.abs(out - attention_ref(q, k, v))))
+    emit("kernels/flash_attention_256", us, err)
+
+    x = jnp.asarray(rng.normal(size=(1, 128, 4, 32)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (1, 128, 4)), jnp.float32)
+    A = jnp.asarray(np.log(rng.uniform(1, 16, 4)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(1, 128, 1, 16)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(1, 128, 1, 16)), jnp.float32)
+    us, out = timeit(lambda *a: ssd_scan(*a), x, dt, A, Bm, Cm)
+    err = float(jnp.max(jnp.abs(out[0] - ssd_ref(x, dt, A, Bm, Cm)[0])))
+    emit("kernels/mamba2_ssd_128", us, err)
+
+
+ALL = {"table1": table1, "table2b": table2b, "table3": table3,
+       "table4": table4, "fig4": fig4, "fig5": fig5}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    rounds = args.rounds or (25 if args.quick else 60)
+    only = args.only.split(",") if args.only else None
+    print("name,us_per_call,derived")
+    for name, fn in ALL.items():
+        if only and name not in only:
+            continue
+        fn(rounds)
+    if only is None or "convex" in only:
+        convex()
+    if only is None or "kernels" in only:
+        kernels()
+    with open("bench_results.csv", "w") as f:
+        f.write("name,us_per_call,derived\n")
+        f.write("\n".join(ROWS) + "\n")
+
+
+if __name__ == "__main__":
+    main()

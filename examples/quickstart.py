@@ -1,0 +1,49 @@
+"""Quickstart: Δ-SGD federated learning in ~50 lines.
+
+Trains an MLP on a non-iid synthetic federation (100 clients, Dirichlet
+α=0.1, 10% participation) with the paper's auto-tuned client step size —
+no learning rate anywhere.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_tasks import MLP_SMALL
+from repro.core import (get_client_opt, get_server_opt, init_fl_state,
+                        make_fl_round, make_loss)
+from repro.data.pipeline import FederatedDataset
+from repro.data.synthetic import get_task
+from repro.models.small import accuracy, make_small_model, softmax_ce
+
+ROUNDS = 100
+
+# 1. a federated, non-iid dataset (latent-Dirichlet label skew)
+task = get_task("medium")
+fed = FederatedDataset.build(task, num_clients=100, alpha=0.1, seed=0)
+
+# 2. a model and a loss
+init_fn, logits_fn = make_small_model(MLP_SMALL)
+loss_fn = make_loss(lambda p, b: (softmax_ce(logits_fn(p, b["x"]), b["y"]),
+                                  {}))
+
+# 3. Δ-SGD clients (paper defaults γ=2, η0=0.2, θ0=1, δ=0.1 — no tuning)
+#    + FedAvg server, compiled into one jitted round
+client_opt = get_client_opt("delta_sgd")
+server_opt = get_server_opt("fedavg")
+fl_round = jax.jit(make_fl_round(loss_fn, client_opt, server_opt,
+                                 num_rounds=ROUNDS))
+
+state = init_fl_state(init_fn(jax.random.key(0)), server_opt)
+K = fed.epoch_steps(batch_size=64)          # E = 1 local epoch
+
+for t in range(ROUNDS):
+    batches, weights, _ = fed.sample_round(0.1, K, batch_size=64)
+    state, metrics, _ = fl_round(state, jax.tree.map(jnp.asarray, batches))
+    if t % 10 == 0 or t == ROUNDS - 1:
+        xt, yt = fed.test_batch(2000)
+        acc = accuracy(logits_fn(state.params, jnp.asarray(xt)),
+                       jnp.asarray(yt))
+        print(f"round {t:3d}  train-loss {float(metrics['loss']):.3f}  "
+              f"test-acc {float(acc):.3f}  "
+              f"mean η {float(metrics['eta_mean']):.4f}")

@@ -1,0 +1,95 @@
+"""Checkpointing: save/restore any pytree (params, FLState, decode caches)
+to a directory of .npy files + a JSON treedef manifest. No external deps;
+atomic via tmp-dir rename; keeps the last N checkpoints.
+
+    save(path, state, step=12)
+    state, step = restore(path, like=state_template)
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in path)
+        out.append((key or "leaf", leaf))
+    return out
+
+
+def save(ckpt_dir: str, tree: Any, *, step: int = 0, keep: int = 3) -> str:
+    """Write checkpoint ``step``; returns its directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest = {"step": step, "leaves": []}
+    for i, (key, leaf) in enumerate(_flatten_with_paths(tree)):
+        arr = np.asarray(leaf)
+        logical_dtype = str(arr.dtype)
+        if arr.dtype == jax.numpy.bfloat16:  # numpy can't store bf16
+            arr = arr.astype(np.float32)
+        fname = f"{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append(
+            {"key": key, "file": fname, "dtype": logical_dtype,
+             "shape": list(arr.shape)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, like: Any, *, step: Optional[int] = None
+            ) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (shapes/dtypes verified)."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves_meta = manifest["leaves"]
+    like_leaves, treedef = jax.tree_util.tree_flatten(like)
+    if len(like_leaves) != len(leaves_meta):
+        raise ValueError(f"checkpoint has {len(leaves_meta)} leaves, "
+                         f"template has {len(like_leaves)}")
+    leaves = []
+    for meta, tmpl in zip(leaves_meta, like_leaves):
+        arr = np.load(os.path.join(d, meta["file"]))
+        if list(arr.shape) != list(np.shape(tmpl)):
+            raise ValueError(f"shape mismatch at {meta['key']}: "
+                             f"{arr.shape} vs {np.shape(tmpl)}")
+        leaves.append(jax.numpy.asarray(arr, dtype=tmpl.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)

@@ -1,0 +1,187 @@
+"""Unified client-optimizer interface — everything the paper compares:
+
+    SGD, SGD(↓), SGDM, SGDM(↓), Adam, Adagrad, SPS, Δ-SGD
+
+ClientOpt is a triple of pure pytree functions, vmappable over a leading
+client axis and scannable over local steps:
+
+    state = opt.init(params)
+    state = opt.reset(state, round_frac)        # start of each round
+    params, state = opt.update(params, grads, state, loss)
+
+``round_frac`` = t/T implements the paper's step-wise LR decay (÷10 after
+50% and 75% of rounds) for the (↓) variants.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.delta_sgd import (DeltaSGDState, delta_sgd_init,
+                                  delta_sgd_reset, delta_sgd_update,
+                                  _global_norm)
+
+
+class ClientOpt(NamedTuple):
+    name: str
+    init: Callable[[Any], Any]
+    reset: Callable[[Any, jax.Array], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple]
+
+
+def _decay_scale(round_frac):
+    """Paper's (↓) schedule: ÷10 at 50%, ÷100 at 75% of total rounds."""
+    return jnp.where(round_frac >= 0.75, 0.01,
+                     jnp.where(round_frac >= 0.5, 0.1, 1.0))
+
+
+def _sgd_like(name, lr, momentum=0.0, decay=False):
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params) if momentum
+                else None,
+                "scale": jnp.asarray(1.0, jnp.float32)}
+
+    def reset(state, round_frac):
+        state = dict(state)
+        state["scale"] = (_decay_scale(round_frac) if decay
+                          else jnp.asarray(1.0, jnp.float32))
+        return state
+
+    def update(params, grads, state, loss):
+        del loss
+        eta = lr * state["scale"]
+        if momentum:
+            m = jax.tree.map(lambda m_, g: momentum * m_ + g,
+                             state["m"], grads)
+            params = jax.tree.map(
+                lambda p, m_: (p.astype(jnp.float32)
+                               - eta * m_.astype(jnp.float32)
+                               ).astype(p.dtype), params, m)
+            return params, {"m": m, "scale": state["scale"]}
+        params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - eta * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return params, state
+
+    return ClientOpt(name, init, reset, update)
+
+
+def _adam_like(name, lr, b1=0.9, b2=0.999, eps=1e-8, adagrad=False):
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params),
+                "v": jax.tree.map(jnp.zeros_like, params),
+                "t": jnp.asarray(0, jnp.int32)}
+
+    def reset(state, round_frac):
+        del round_frac
+        return state
+
+    def update(params, grads, state, loss):
+        del loss
+        t = state["t"] + 1
+        if adagrad:
+            v = jax.tree.map(lambda v_, g: v_ + jnp.square(g), state["v"],
+                             grads)
+            params = jax.tree.map(
+                lambda p, g, v_: (p.astype(jnp.float32) - lr * g
+                                  / (jnp.sqrt(v_.astype(jnp.float32)) + eps)
+                                  ).astype(p.dtype),
+                params, grads, v)
+            return params, {"m": state["m"], "v": v, "t": t}
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"],
+                         grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g),
+                         state["v"], grads)
+        tf = t.astype(jnp.float32)
+        bc1 = 1 - b1 ** tf
+        bc2 = 1 - b2 ** tf
+        params = jax.tree.map(
+            lambda p, m_, v_: (p.astype(jnp.float32)
+                               - lr * (m_.astype(jnp.float32) / bc1)
+                               / (jnp.sqrt(v_.astype(jnp.float32) / bc2)
+                                  + eps)).astype(p.dtype),
+            params, m, v)
+        return params, {"m": m, "v": v, "t": t}
+
+    return ClientOpt(name, init, reset, update)
+
+
+def _sps(name, c=0.5, f_star=0.0, eps=1e-8):
+    """Stochastic Polyak step size (Loizou et al. 2021), paper footnote 4:
+    η = (f_i(x) − f*) / (c·‖∇f_i(x)‖²) with f* = 0, c = 0.5."""
+    def init(params):
+        del params
+        return {}
+
+    def reset(state, round_frac):
+        del round_frac
+        return state
+
+    def update(params, grads, state, loss):
+        gn2 = jnp.square(_global_norm(grads))
+        eta = (loss.astype(jnp.float32) - f_star) / (c * gn2 + eps)
+        params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - eta * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return params, state
+
+    return ClientOpt(name, init, reset, update)
+
+
+def _delta_sgd(name, *, gamma, delta, eta0, theta0, groupwise=False,
+               use_pallas=False):
+    def init(params):
+        return delta_sgd_init(params, eta0=eta0, theta0=theta0,
+                              groupwise=groupwise)
+
+    def reset(state, round_frac):
+        del round_frac
+        return delta_sgd_reset(state, eta0=eta0, theta0=theta0)
+
+    def update(params, grads, state, loss):
+        del loss
+        return delta_sgd_update(params, grads, state, gamma=gamma,
+                                delta=delta, eta0=eta0,
+                                use_pallas=use_pallas)
+
+    return ClientOpt(name, init, reset, update)
+
+
+def get_client_opt(name: str, fl_cfg=None, **overrides) -> ClientOpt:
+    """Factory. ``fl_cfg`` supplies defaults (FLConfig); overrides win."""
+    from repro.configs.base import FLConfig
+    cfg = fl_cfg or FLConfig()
+    lr = overrides.get("lr", cfg.lr)
+    mom = overrides.get("momentum", cfg.momentum)
+    if name == "sgd":
+        return _sgd_like("sgd", lr)
+    if name == "sgd_decay":
+        return _sgd_like("sgd_decay", lr, decay=True)
+    if name == "sgdm":
+        return _sgd_like("sgdm", lr, momentum=mom)
+    if name == "sgdm_decay":
+        return _sgd_like("sgdm_decay", lr, momentum=mom, decay=True)
+    if name == "adam":
+        return _adam_like("adam", lr)
+    if name == "adagrad":
+        return _adam_like("adagrad", lr, adagrad=True)
+    if name == "sps":
+        return _sps("sps", c=overrides.get("c", 0.5))
+    if name == "delta_sgd":
+        return _delta_sgd(
+            "delta_sgd",
+            gamma=overrides.get("gamma", cfg.gamma),
+            delta=overrides.get("delta", cfg.delta),
+            eta0=overrides.get("eta0", cfg.eta0),
+            theta0=overrides.get("theta0", cfg.theta0),
+            groupwise=overrides.get("groupwise", False),
+            use_pallas=overrides.get("use_pallas", False))
+    raise KeyError(f"unknown client optimizer {name!r}")
+
+
+CLIENT_OPTS = ("sgd", "sgd_decay", "sgdm", "sgdm_decay", "adam", "adagrad",
+               "sps", "delta_sgd")

@@ -1,0 +1,130 @@
+"""Δ-SGD (DELTA-SGD): the paper's contribution. Eq. (4) + Algorithm 1.
+
+    η_{t,k}^i = min( γ·‖x_k − x_{k−1}‖ / (2‖∇̃f_i(x_k) − ∇̃f_i(x_{k−1})‖),
+                     sqrt(1 + δ·θ_{k−1})·η_{k−1} )
+    θ_k = η_k / η_{k−1}
+
+Implementation notes:
+  * For plain SGD updates, ‖x_k − x_{k−1}‖ = η_{k−1}·‖g_{k−1}‖ exactly, so
+    the state carries only the previous gradient (plus η, θ) — one extra
+    param-sized buffer, matching the paper's memory claim (vs AdaAlter's 2×).
+  * The previous gradient is *reused* for the step-size (paper §3: "we use
+    the same batches to prevent additional gradient evaluations").
+  * η₀, θ₀ are reset at the start of every round (Alg. 1 line 6).
+  * All norms are global over the param pytree, computed in fp32 — under
+    pjit these lower to small all-reduces on the client's submesh.
+  * ``groupwise=True`` is a beyond-paper extension: one step size per
+    top-level param group instead of one per client (ablated in
+    EXPERIMENTS.md). Default is the faithful global rule.
+
+The fused Pallas kernel (repro/kernels/delta_sgd) performs the update +
+both norm accumulations in a single HBM pass; ``use_pallas`` switches it in.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DeltaSGDState(NamedTuple):
+    prev_grads: object      # pytree like params
+    eta: jax.Array          # current step size (scalar f32, or per-group)
+    theta: jax.Array        # η_k / η_{k-1}
+    prev_grad_norm: jax.Array
+    k: jax.Array            # local step counter (resets every round)
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def _group_norms(tree):
+    """One norm per top-level key (beyond-paper groupwise variant)."""
+    return {k: _global_norm(v) for k, v in tree.items()}
+
+
+def delta_sgd_init(params, *, eta0: float, theta0: float,
+                   groupwise: bool = False) -> DeltaSGDState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+    if groupwise:
+        eta = {k: jnp.asarray(eta0, jnp.float32) for k in params}
+        theta = {k: jnp.asarray(theta0, jnp.float32) for k in params}
+        pgn = {k: jnp.asarray(0.0, jnp.float32) for k in params}
+    else:
+        eta = jnp.asarray(eta0, jnp.float32)
+        theta = jnp.asarray(theta0, jnp.float32)
+        pgn = jnp.asarray(0.0, jnp.float32)
+    return DeltaSGDState(zeros, eta, theta, pgn, jnp.asarray(0, jnp.int32))
+
+
+def delta_sgd_reset(state: DeltaSGDState, *, eta0: float,
+                    theta0: float) -> DeltaSGDState:
+    """Round-start reset (Alg. 1 line 6): η ← η₀, θ ← θ₀, k ← 0."""
+    eta = jax.tree.map(lambda e: jnp.full_like(e, eta0), state.eta)
+    theta = jax.tree.map(lambda t: jnp.full_like(t, theta0), state.theta)
+    pgn = jax.tree.map(lambda n: jnp.zeros_like(n), state.prev_grad_norm)
+    return DeltaSGDState(state.prev_grads, eta, theta, pgn,
+                         jnp.asarray(0, jnp.int32))
+
+
+def _eta_rule(eta_prev, theta_prev, dx_norm, dg_norm, gamma, delta):
+    """Eq. (4) with the δ-damped growth condition (Appendix B.1)."""
+    cand1 = jnp.where(dg_norm > 0.0,
+                      gamma * dx_norm / (2.0 * dg_norm),
+                      jnp.asarray(jnp.inf, jnp.float32))
+    cand2 = jnp.sqrt(1.0 + delta * theta_prev) * eta_prev
+    eta = jnp.minimum(cand1, cand2)
+    theta = eta / eta_prev
+    return eta, theta
+
+
+def delta_sgd_update(params, grads, state: DeltaSGDState, *, gamma: float,
+                     delta: float, eta0: float, use_pallas: bool = False):
+    """One local step: compute η via Eq. (4) (η₀ on the first local step),
+    apply x ← x − η·g, and roll the state."""
+    groupwise = isinstance(state.eta, dict)
+    first = (state.k == 0)
+
+    if groupwise:
+        dg = {k: _global_norm(jax.tree.map(lambda a, b: a - b, grads[k],
+                                           state.prev_grads[k]))
+              for k in params}
+        gn = _group_norms(grads)
+        new_eta, new_theta = {}, {}
+        for k in params:
+            dx = state.eta[k] * state.prev_grad_norm[k]
+            e, t = _eta_rule(state.eta[k], state.theta[k], dx, dg[k],
+                             gamma, delta)
+            new_eta[k] = jnp.where(first, jnp.asarray(eta0, jnp.float32), e)
+            new_theta[k] = jnp.where(first, state.theta[k], t)
+        new_params = {k: jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - new_eta[k] * g.astype(jnp.float32)).astype(p.dtype),
+            params[k], grads[k]) for k in params}
+        new_state = DeltaSGDState(grads, new_eta, new_theta, gn, state.k + 1)
+        return new_params, new_state
+
+    if use_pallas:
+        from repro.kernels.delta_sgd import ops as dsgd_ops
+        return dsgd_ops.fused_delta_sgd_update(
+            params, grads, state, gamma=gamma, delta=delta, eta0=eta0)
+
+    # ‖x_k − x_{k-1}‖ = η_{k-1}·‖g_{k-1}‖ for SGD updates
+    dx_norm = state.eta * state.prev_grad_norm
+    dg_norm = _global_norm(jax.tree.map(lambda a, b: a - b, grads,
+                                        state.prev_grads))
+    eta, theta = _eta_rule(state.eta, state.theta, dx_norm, dg_norm,
+                           gamma, delta)
+    eta = jnp.where(first, jnp.asarray(eta0, jnp.float32), eta)
+    theta = jnp.where(first, state.theta, theta)
+    grad_norm = _global_norm(grads)
+    new_params = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32)
+                      - eta * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads)
+    return new_params, DeltaSGDState(grads, eta, theta, grad_norm,
+                                     state.k + 1)

@@ -1,0 +1,91 @@
+"""One jitted federated round (Algorithm 1, full loop body).
+
+Communication pattern, expressed jax-natively:
+  * the |S_t| participating clients form a leading pytree axis C, sharded
+    over the mesh's client axes (FederationSpec);
+  * each client runs K local steps (lax.scan) of its ClientOpt from the
+    common round-start params (vmap over C — params broadcast);
+  * server aggregation is a (weighted) mean over C — XLA lowers it to an
+    all-reduce over the client mesh axes, i.e. the FedAvg collective;
+  * the ServerOpt (FedAvg/FedAdam/...) finishes the round.
+
+Batch layout: every leaf of ``client_batches`` is (C, K, ...) — K per-step
+micro-batches of the client's *local* data.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.client_opt import ClientOpt
+from repro.core.delta_sgd import DeltaSGDState
+from repro.core.server_opt import ServerOpt
+
+
+class FLState(NamedTuple):
+    params: Any
+    server_state: Any
+    round: jax.Array
+
+
+def init_fl_state(params, server_opt: ServerOpt) -> FLState:
+    return FLState(params, server_opt.init(params),
+                   jnp.asarray(0, jnp.int32))
+
+
+def make_fl_round(loss_fn, client_opt: ClientOpt, server_opt: ServerOpt, *,
+                  num_rounds: int, weighted: bool = False):
+    """loss_fn(params, batch, global_params, prev_params)->(loss, metrics).
+
+    Returns round_fn(state, client_batches, client_weights=None,
+                     prev_local_params=None) -> (state, metrics).
+    """
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def one_client(global_params, round_frac, batch_c, prev_c):
+        ostate = client_opt.reset(client_opt.init(global_params), round_frac)
+
+        def step(carry, b):
+            p, os = carry
+            (l, _), g = grad_fn(p, b, global_params, prev_c)
+            p, os = client_opt.update(p, g, os, l)
+            return (p, os), l
+
+        from repro.models.common import scan_unroll
+        (p, os), losses = jax.lax.scan(step, (global_params, ostate),
+                                       batch_c, unroll=scan_unroll())
+        eta = (os.eta if isinstance(os, DeltaSGDState)
+               and not isinstance(os.eta, dict) else jnp.asarray(0.0))
+        return p, losses, eta
+
+    def round_fn(state: FLState, client_batches, client_weights=None,
+                 prev_local_params=None):
+        """-> (new_state, metrics, new_local_params (C, ...))."""
+        round_frac = state.round.astype(jnp.float32) / num_rounds
+        gp = state.params
+        new_locals, losses, etas = jax.vmap(
+            one_client, in_axes=(None, None, 0,
+                                 0 if prev_local_params is not None
+                                 else None)
+        )(gp, round_frac, client_batches, prev_local_params)
+
+        if weighted and client_weights is not None:
+            w = client_weights / jnp.sum(client_weights)
+            agg = jax.tree.map(
+                lambda x: jnp.tensordot(w.astype(jnp.float32),
+                                        x.astype(jnp.float32), axes=(0, 0)
+                                        ).astype(x.dtype), new_locals)
+        else:
+            agg = jax.tree.map(
+                lambda x: jnp.mean(x.astype(jnp.float32), axis=0
+                                   ).astype(x.dtype), new_locals)
+
+        params, sstate = server_opt.update(gp, agg, state.server_state)
+        metrics = {"loss": jnp.mean(losses),
+                   "loss_last_step": jnp.mean(losses[:, -1]),
+                   "eta_mean": jnp.mean(etas)}
+        return FLState(params, sstate, state.round + 1), metrics, new_locals
+
+    return round_fn

@@ -1,0 +1,51 @@
+"""Client loss functions: CE, FedProx (Li et al. 2020), MOON (Li et al. 2021).
+
+The FL round threads (params, batch, global_params, prev_params) through a
+uniform signature; plain CE ignores the extra arguments. Δ-SGD composes with
+any of these (paper Tables 2b, 5, 6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _sq_dist(a, b):
+    return sum(jnp.sum(jnp.square(x.astype(jnp.float32)
+                                  - y.astype(jnp.float32)))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def make_loss(base_loss_fn, *, fedprox_mu: float = 0.0, moon_mu: float = 0.0,
+              moon_tau: float = 0.5, repr_fn=None):
+    """base_loss_fn(params, batch) -> (loss, metrics).
+
+    Returns loss_fn(params, batch, global_params, prev_params)
+    -> (loss, metrics).
+    """
+    def loss_fn(params, batch, global_params=None, prev_params=None):
+        loss, metrics = base_loss_fn(params, batch)
+        if fedprox_mu and global_params is not None:
+            prox = 0.5 * fedprox_mu * _sq_dist(params, global_params)
+            loss = loss + prox
+            metrics = {**metrics, "prox": prox}
+        if moon_mu and global_params is not None and prev_params is not None:
+            assert repr_fn is not None, "MOON needs a representation fn"
+            z = repr_fn(params, batch)
+            z_glob = jax.lax.stop_gradient(repr_fn(global_params, batch))
+            z_prev = jax.lax.stop_gradient(repr_fn(prev_params, batch))
+
+            def cos(a, b):
+                a = a / (jnp.linalg.norm(a, axis=-1, keepdims=True) + 1e-8)
+                b = b / (jnp.linalg.norm(b, axis=-1, keepdims=True) + 1e-8)
+                return jnp.sum(a * b, axis=-1)
+
+            pos = cos(z, z_glob) / moon_tau
+            neg = cos(z, z_prev) / moon_tau
+            con = -jnp.mean(pos - jnp.logaddexp(pos, neg))
+            loss = loss + moon_mu * con
+            metrics = {**metrics, "moon": con}
+        return loss, metrics
+
+    return loss_fn

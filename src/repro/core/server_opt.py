@@ -1,0 +1,93 @@
+"""Server-side aggregation optimizers (Reddi et al. 2021 meta-algorithm).
+
+update(global_params, client_mean, state) -> (new_params, state)
+
+FedAvg     : x ← mean_i x_i^K                      (paper's main setting)
+FedAvgM    : server momentum on Δ = mean − x
+FedAdam    : Adam on pseudo-gradient −Δ
+FedYogi    : Yogi on pseudo-gradient −Δ
+
+Δ-SGD is orthogonal to all of these (paper §2, Appendix B.4).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ServerOpt(NamedTuple):
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]
+
+
+def fedavg() -> ServerOpt:
+    return ServerOpt("fedavg",
+                     lambda params: {},
+                     lambda params, mean, state: (mean, state))
+
+
+def fedavgm(lr: float = 1.0, momentum: float = 0.9) -> ServerOpt:
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(params, mean, state):
+        delta = jax.tree.map(lambda a, b: a - b, mean, params)
+        m = jax.tree.map(lambda m_, d: momentum * m_ + d, state["m"], delta)
+        new = jax.tree.map(
+            lambda p, m_: (p.astype(jnp.float32)
+                           + lr * m_.astype(jnp.float32)).astype(p.dtype),
+            params, m)
+        return new, {"m": m}
+
+    return ServerOpt("fedavgm", init, update)
+
+
+def _adaptive(name, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, yogi=False):
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params),
+                "v": jax.tree.map(jnp.zeros_like, params),
+                "t": jnp.asarray(0, jnp.int32)}
+
+    def update(params, mean, state):
+        delta = jax.tree.map(lambda a, b: (a - b).astype(jnp.float32),
+                             mean, params)
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m_, d: b1 * m_ + (1 - b1) * d,
+                         state["m"], delta)
+        if yogi:
+            v = jax.tree.map(
+                lambda v_, d: v_ - (1 - b2) * jnp.square(d)
+                * jnp.sign(v_ - jnp.square(d)), state["v"], delta)
+        else:
+            v = jax.tree.map(lambda v_, d: b2 * v_ + (1 - b2) * jnp.square(d),
+                             state["v"], delta)
+        tf = t.astype(jnp.float32)
+        bc1, bc2 = 1 - b1 ** tf, 1 - b2 ** tf
+        new = jax.tree.map(
+            lambda p, m_, v_: (p.astype(jnp.float32)
+                               + lr * (m_ / bc1)
+                               / (jnp.sqrt(jnp.abs(v_) / bc2) + eps)
+                               ).astype(p.dtype),
+            params, m, v)
+        return new, {"m": m, "v": v, "t": t}
+
+    return ServerOpt(name, init, update)
+
+
+def fedadam(lr: float = 1e-3) -> ServerOpt:
+    return _adaptive("fedadam", lr=lr)
+
+
+def fedyogi(lr: float = 1e-3) -> ServerOpt:
+    return _adaptive("fedyogi", lr=lr, yogi=True)
+
+
+def get_server_opt(name: str, **kw) -> ServerOpt:
+    return {"fedavg": fedavg, "fedavgm": fedavgm, "fedadam": fedadam,
+            "fedyogi": fedyogi}[name](**kw)
+
+
+SERVER_OPTS = ("fedavg", "fedavgm", "fedadam", "fedyogi")

@@ -1,0 +1,85 @@
+"""Federated batching: client sampling (participation p) and (C, K, b, ...)
+round-batch assembly consumed by ``make_fl_round``.
+
+Also provides the synthetic LM round batches used when training the assigned
+transformer architectures federatedly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.data.dirichlet import dirichlet_partition
+from repro.data.synthetic import TaskData
+
+
+@dataclass
+class FederatedDataset:
+    task: TaskData
+    clients: List[np.ndarray]          # per-client index arrays
+    rng: np.random.Generator
+
+    @classmethod
+    def build(cls, task: TaskData, *, num_clients: int, alpha: float,
+              samples_per_client: int = 500, seed: int = 0,
+              variable_sizes=None) -> "FederatedDataset":
+        clients = dirichlet_partition(task.y, num_clients, alpha,
+                                      samples_per_client, seed=seed,
+                                      variable_sizes=variable_sizes)
+        return cls(task, clients, np.random.default_rng(seed + 17))
+
+    @property
+    def num_clients(self) -> int:
+        return len(self.clients)
+
+    def client_sizes(self) -> np.ndarray:
+        return np.array([len(c) for c in self.clients], np.float32)
+
+    def sample_round(self, participation: float, local_steps: int,
+                     batch_size: int):
+        """Returns (client_batches dict of (C,K,b,...) arrays,
+        client_weights (C,), client_ids)."""
+        m = self.num_clients
+        C = max(1, int(round(participation * m)))
+        ids = self.rng.choice(m, size=C, replace=False)
+        xs, ys = [], []
+        for i in ids:
+            idx = self.clients[i]
+            take = self.rng.choice(idx, size=local_steps * batch_size,
+                                   replace=len(idx) < local_steps
+                                   * batch_size)
+            xs.append(self.task.x[take].reshape(local_steps, batch_size,
+                                                *self.task.x.shape[1:]))
+            ys.append(self.task.y[take].reshape(local_steps, batch_size))
+        batches = {"x": np.stack(xs), "y": np.stack(ys)}
+        weights = self.client_sizes()[ids]
+        return batches, weights.astype(np.float32), ids
+
+    def epoch_steps(self, batch_size: int) -> int:
+        """K for one local epoch (paper: K = E·n_i / b with E = 1)."""
+        n = int(np.median(self.client_sizes()))
+        return max(1, n // batch_size)
+
+    def test_batch(self, n: Optional[int] = None):
+        if n is None or n >= len(self.task.y_test):
+            return self.task.x_test, self.task.y_test
+        idx = self.rng.choice(len(self.task.y_test), n, replace=False)
+        return self.task.x_test[idx], self.task.y_test[idx]
+
+
+def lm_round_batches(rng: np.random.Generator, *, clients: int,
+                     local_steps: int, batch: int, seq: int, vocab: int,
+                     extras: Optional[Dict] = None):
+    """Synthetic LM round batch (C, K, b, S) tokens + next-token labels.
+    ``extras`` adds stub-frontend arrays (frames / image_embeds) with a
+    (C, K, b, ...) leading layout."""
+    toks = rng.integers(0, vocab, (clients, local_steps, batch, seq + 1),
+                        dtype=np.int32)
+    out = {"tokens": toks[..., :-1], "labels": toks[..., 1:]}
+    if extras:
+        for k, shape in extras.items():
+            out[k] = rng.normal(size=(clients, local_steps, batch) + shape
+                                ).astype(np.float32)
+    return out

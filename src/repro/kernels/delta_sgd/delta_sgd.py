@@ -1,0 +1,112 @@
+"""Pallas TPU kernels for Δ-SGD's per-step param work.
+
+The paper's step size needs two global reductions per local step
+(‖g_k − g_{k−1}‖², ‖g_k‖² — the ‖Δx‖ term reuses the previous ‖g‖ since
+Δx = −η·g for SGD updates). The reductions must complete before η is known,
+so the update itself is a second pass. Kernel pair:
+
+  delta_sgd_norms  — ONE HBM pass over (g, g_prev) producing BOTH partial
+                     sums per block, accumulated across the sequential TPU
+                     grid into a (1,1) output. bf16-in / f32-accumulate.
+  delta_sgd_apply  — p ← p − η·g, tiled through VMEM; the caller donates
+                     p so the update is in-place, and g is carried forward
+                     as the next g_prev without a copy.
+
+vs. the naive 3-pass schedule (norm Δg, norm g, update + state copy) this
+is the HBM-bandwidth floor for the rule: read {g, g_prev} once, read {p, g}
+once, write {p} once.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 1024
+LANES = 128
+
+
+def _norms_kernel(g_ref, gp_ref, dg_ref, gg_ref):
+    i = pl.program_id(0)
+    g = g_ref[...].astype(jnp.float32)
+    gp = gp_ref[...].astype(jnp.float32)
+    d = g - gp
+    dg = jnp.sum(d * d)
+    gg = jnp.sum(g * g)
+
+    @pl.when(i == 0)
+    def _init():
+        dg_ref[0, 0] = 0.0
+        gg_ref[0, 0] = 0.0
+
+    dg_ref[0, 0] += dg
+    gg_ref[0, 0] += gg
+
+
+def _apply_kernel(eta_ref, p_ref, g_ref, out_ref):
+    eta = eta_ref[0, 0]
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    out_ref[...] = (p - eta * g).astype(out_ref.dtype)
+
+
+def _pad_2d(x: jax.Array):
+    """Flatten to (M, LANES) with zero padding; returns (x2d, orig_size)."""
+    n = x.size
+    m = -(-n // LANES)
+    pad = m * LANES - n
+    flat = x.reshape(-1)
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), x.dtype)])
+    return flat.reshape(m, LANES), n
+
+
+def norms(g: jax.Array, g_prev: jax.Array, *, interpret: bool = False):
+    """(sum((g-gp)^2), sum(g^2)) over one tensor, single HBM pass."""
+    g2, _ = _pad_2d(g)
+    gp2, _ = _pad_2d(g_prev)
+    m = g2.shape[0]
+    rows = min(BLOCK_ROWS, m)
+    grid = -(-m // rows)
+    if m % rows:
+        extra = grid * rows - m
+        g2 = jnp.pad(g2, ((0, extra), (0, 0)))
+        gp2 = jnp.pad(gp2, ((0, extra), (0, 0)))
+    dg, gg = pl.pallas_call(
+        _norms_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+                  pl.BlockSpec((rows, LANES), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.float32)],
+        interpret=interpret,
+    )(g2, gp2)
+    return dg[0, 0], gg[0, 0]
+
+
+def apply_update(p: jax.Array, g: jax.Array, eta, *,
+                 interpret: bool = False) -> jax.Array:
+    """p ← p − η·g, tiled through VMEM. Same shape/dtype as p."""
+    p2, n = _pad_2d(p)
+    g2, _ = _pad_2d(g)
+    m = p2.shape[0]
+    rows = min(BLOCK_ROWS, m)
+    grid = -(-m // rows)
+    if m % rows:
+        extra = grid * rows - m
+        p2 = jnp.pad(p2, ((0, extra), (0, 0)))
+        g2 = jnp.pad(g2, ((0, extra), (0, 0)))
+    eta_arr = jnp.asarray(eta, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        _apply_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+                  pl.BlockSpec((rows, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(p2.shape, p.dtype),
+        interpret=interpret,
+    )(eta_arr, p2, g2)
+    return out.reshape(-1)[:n].reshape(p.shape)

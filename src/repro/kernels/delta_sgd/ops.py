@@ -1,0 +1,49 @@
+"""jit'd wrapper: full Δ-SGD local step over a param pytree using the
+Pallas kernels (falls back to interpret mode off-TPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.delta_sgd import delta_sgd as k
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def tree_norms(grads, prev_grads):
+    """Global ‖g − g_prev‖ and ‖g‖ via the one-pass dual-reduction kernel."""
+    dg2 = jnp.zeros((), jnp.float32)
+    gg2 = jnp.zeros((), jnp.float32)
+    for g, gp in zip(jax.tree_util.tree_leaves(grads),
+                     jax.tree_util.tree_leaves(prev_grads)):
+        a, b = k.norms(g, gp, interpret=_interpret())
+        dg2 += a
+        gg2 += b
+    return jnp.sqrt(dg2), jnp.sqrt(gg2)
+
+
+def tree_apply(params, grads, eta):
+    leaves_p, tdef = jax.tree_util.tree_flatten(params)
+    leaves_g = jax.tree_util.tree_leaves(grads)
+    out = [k.apply_update(p, g, eta, interpret=_interpret())
+           for p, g in zip(leaves_p, leaves_g)]
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def fused_delta_sgd_update(params, grads, state, *, gamma: float,
+                           delta: float, eta0: float):
+    """Drop-in replacement for core.delta_sgd.delta_sgd_update (global
+    variant): kernel-backed norms + update."""
+    from repro.core.delta_sgd import DeltaSGDState, _eta_rule
+    first = (state.k == 0)
+    dg_norm, grad_norm = tree_norms(grads, state.prev_grads)
+    dx_norm = state.eta * state.prev_grad_norm
+    eta, theta = _eta_rule(state.eta, state.theta, dx_norm, dg_norm,
+                           gamma, delta)
+    eta = jnp.where(first, jnp.asarray(eta0, jnp.float32), eta)
+    theta = jnp.where(first, state.theta, theta)
+    new_params = tree_apply(params, grads, eta)
+    return new_params, DeltaSGDState(grads, eta, theta, grad_norm,
+                                     state.k + 1)

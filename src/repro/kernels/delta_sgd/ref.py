@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused Δ-SGD kernels.
+
+Two ops, matching the kernel pair:
+  norms_ref(g, g_prev)      -> (sum((g-g_prev)^2), sum(g^2))  [one pass]
+  apply_ref(p, g, eta)      -> p - eta * g                    [one pass]
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def norms_ref(g: jnp.ndarray, g_prev: jnp.ndarray):
+    g32 = g.astype(jnp.float32)
+    gp32 = g_prev.astype(jnp.float32)
+    return (jnp.sum(jnp.square(g32 - gp32)), jnp.sum(jnp.square(g32)))
+
+
+def apply_ref(p: jnp.ndarray, g: jnp.ndarray, eta) -> jnp.ndarray:
+    return (p.astype(jnp.float32)
+            - eta * g.astype(jnp.float32)).astype(p.dtype)

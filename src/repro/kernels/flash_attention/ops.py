@@ -1,0 +1,11 @@
+"""jit'd wrapper for the flash-attention kernel (interpret mode off-TPU)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+__all__ = ["flash_attention"]

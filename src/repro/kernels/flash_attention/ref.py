@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash-attention kernel: causal (optionally
+sliding-window) GQA attention, full-precision softmax."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True,
+                  window: Optional[int] = None) -> jax.Array:
+    """q: (B,S,H,hd), k/v: (B,T,KV,hd), H % KV == 0. Returns (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg,
+                        k.astype(jnp.float32)) / np.sqrt(hd)
+    T = k.shape[1]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (S, T), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (S, T), 1)
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= (rows - cols) < window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)

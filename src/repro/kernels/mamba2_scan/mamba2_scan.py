@@ -1,0 +1,103 @@
+"""Mamba2 SSD chunk kernel for TPU (Pallas).
+
+The SSD algorithm splits the recurrence into (i) an intra-chunk dense part
+(an L×L masked matmul — MXU work) and (ii) a cheap inter-chunk state scan.
+This kernel computes, per (batch·head, chunk):
+
+    cs      = cumsum(dt * A)                      (L,)
+    M[q,k]  = (C_q·B_k) · exp(cs_q − cs_k) · dt_k    for k ≤ q
+    y_intra = M @ x                               (L, P)
+    S_c     = Σ_k exp(cs_L − cs_k)·dt_k · x_k ⊗ B_k  (P, N)  chunk summary
+    cd      = exp(cs_L)                           chunk decay
+
+The inter-chunk combine (h ← cd·h + S_c; y += C·h_prev·exp(cs)) stays in
+jnp — it is elementwise/small and keeps the sequential dependency out of
+the kernel. Chunk L=64 with P=64, N=64: VMEM working set < 200 KB; the
+L×L and L×P matmuls are MXU-shaped.
+
+Grid: (B, H, nc). All refs arrive as (1, L|1, 1, ·) blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+CHUNK = 64
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, dA_ref, b_ref, c_ref,
+                      y_ref, s_ref, cd_ref, csl_ref):
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (L,P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # (L,)
+    dA = dA_ref[0, :, 0].astype(jnp.float32)         # (L,)
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)       # (L,N)
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)       # (L,N)
+    L = x.shape[0]
+
+    cs = jnp.cumsum(dA)                              # (L,)
+    # intra-chunk masked decay matmul
+    diff = cs[:, None] - cs[None, :]                 # (q,k)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    decay = jnp.where(cols <= rows, jnp.exp(diff), 0.0)
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    M = CB * decay * dt[None, :]
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # chunk summary state S_c = (w ⊙ x)^T-style outer-product sum -> (P,N)
+    w = jnp.exp(cs[L - 1] - cs) * dt                 # (L,)
+    xw = x * w[:, None]                              # (L,P)
+    S_c = jax.lax.dot_general(xw, Bm, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    s_ref[0, 0, 0, :, :] = S_c.astype(s_ref.dtype)
+    cd_ref[0, 0, 0] = jnp.exp(cs[L - 1])
+    csl_ref[0, :, 0] = jnp.exp(cs).astype(csl_ref.dtype)
+
+
+def ssd_chunks(x, dt, dA, Bh, Ch, *, chunk: int = CHUNK,
+               interpret=None):
+    """x: (B,S,H,P), dt/dA: (B,S,H), Bh/Ch: (B,S,H,N) (heads expanded).
+
+    Returns (y_intra (B,S,H,P), S_c (B,nc,H,P,N), chunk_decay (B,nc,H),
+    exp_cs (B,S,H))."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, S, H, P = x.shape
+    N = Bh.shape[-1]
+    L = min(chunk, S)
+    assert S % L == 0, f"seq {S} not divisible by chunk {L}"
+    nc = S // L
+
+    grid = (B, H, nc)
+    y, S_c, cd, ecs = pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, L, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, L, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, L, 1, N), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, L, 1, N), lambda b, h, c: (b, c, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, L, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, 1, P, N), lambda b, h, c: (b, c, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, L, 1), lambda b, h, c: (b, c, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, nc, H, P, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, nc, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, S, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, dA, Bh, Ch)
+    return y, S_c, cd, ecs

@@ -1,0 +1,44 @@
+"""jit'd wrapper: full SSD scan = Pallas intra-chunk kernel + jnp
+inter-chunk state combine. Drop-in for models.ssm._ssd_chunked."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba2_scan.mamba2_scan import CHUNK, ssd_chunks
+
+
+def ssd_scan(x, dt, A_log, Bm, Cm, h0=None, *, chunk: int = CHUNK):
+    """x: (B,S,H,P), dt: (B,S,H), A_log: (H,), Bm/Cm: (B,S,G,N).
+
+    Returns (y: (B,S,H,P) in x.dtype, h_final: (B,H,P,N) fp32)."""
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    f32 = jnp.float32
+    dA = dt.astype(f32) * (-jnp.exp(A_log.astype(f32)))
+    Bh = jnp.repeat(Bm, rep, axis=2)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+
+    L = min(chunk, S)
+    while S % L:
+        L -= 1
+    nc = S // L
+    y_intra, S_c, cd, ecs = ssd_chunks(x, dt.astype(f32), dA, Bh, Ch,
+                                       chunk=L)
+
+    h0 = jnp.zeros((B, H, P, N), f32) if h0 is None else h0.astype(f32)
+
+    def body(h, inp):
+        s_c, cdc = inp
+        return cdc[:, :, None, None] * h + s_c, h
+
+    h_fin, h_prev = jax.lax.scan(
+        body, h0, (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(cd, 1, 0)))
+
+    # inter-chunk readout: y_q += C_q · h_prev(chunk(q)) · exp(cs_q)
+    Ch_c = jnp.moveaxis(Ch.astype(f32).reshape(B, nc, L, H, N), 1, 0)
+    ecs_c = jnp.moveaxis(ecs.reshape(B, nc, L, H), 1, 0)
+    y_inter = jnp.einsum("cbqhn,cbhpn,cbqh->cbqhp", Ch_c, h_prev, ecs_c)
+    y = y_intra + jnp.moveaxis(y_inter, 0, 1).reshape(B, S, H, P)
+    return y.astype(x.dtype), h_fin

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the Mamba2 SSD kernel: the naive sequential
+recurrence, fp32.
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * x_t ⊗ B_t
+    y_t = C_t · h_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A_log, Bm, Cm, h0=None):
+    """x: (B,S,H,P), dt: (B,S,H) (post-softplus), A_log: (H,),
+    Bm/Cm: (B,S,G,N). Returns (y: (B,S,H,P), h_final: (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    f32 = jnp.float32
+    x = x.astype(f32)
+    dt = dt.astype(f32)
+    Bh = jnp.repeat(Bm.astype(f32), rep, axis=2)      # (B,S,H,N)
+    Ch = jnp.repeat(Cm.astype(f32), rep, axis=2)
+    dA = dt * (-jnp.exp(A_log.astype(f32)))           # (B,S,H)
+
+    h = jnp.zeros((Bsz, H, P, N), f32) if h0 is None else h0.astype(f32)
+
+    def step(h, inp):
+        xt, dtt, dAt, Bt, Ct = inp
+        h = jnp.exp(dAt)[:, :, None, None] * h + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dtt, xt, Bt)
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ct)
+        return h, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (x, dt, dA, Bh, Ch))
+    h, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1), h

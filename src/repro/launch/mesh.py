@@ -1,0 +1,23 @@
+"""Production mesh factory.
+
+Target: TPU v5e pods, 256 chips each.
+  single-pod : (data=16, model=16)            = 256 chips
+  multi-pod  : (pod=2, data=16, model=16)     = 512 chips
+
+Defined as a function so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(shape=(1, 1), axes=("data", "model")):
+    """1-device mesh for CPU tests."""
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,108 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf hillclimbing driver (§Perf): lower a (arch × shape) pair under the
+baseline (paper-faithful) configuration and under beyond-paper optimization
+variants, and report the calibrated roofline terms side by side.
+
+  PYTHONPATH=src python -m repro.launch.perf --pair zamba2-7b/train_4k \
+      --variants baseline,seq_shard
+
+Variants:
+  baseline     paper-faithful configuration (reuses the sweep artifact)
+  seq_shard    Megatron-SP analog: residual stream sharded over `model`
+               along sequence (row-parallel epilogues -> reduce-scatter)
+  softmax_bf16 bf16 softmax-weight storage between the attention matmuls
+  quant_kv     int8 KV cache entries + f16 scales (decode shapes)
+  capacity1    MoE capacity factor 1.25 -> 1.0
+"""
+import argparse
+import json
+import time
+
+import jax.numpy as jnp
+
+from repro import roofline
+from repro.configs import FLConfig, INPUT_SHAPES, get_config
+from repro.launch.dryrun import _at_depth, _calib_depths, _compile_step
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import federation_kind
+from repro.sharding.spec import get_federation_spec
+
+VARIANT_KNOBS = {
+    "baseline": {},
+    "seq_shard": {"seq_shard": True},
+    "softmax_bf16": {"softmax_bf16": True},
+    "seq_shard+softmax_bf16": {"seq_shard": True, "softmax_bf16": True},
+    "quant_kv": {"quant_kv": True},
+    "cache_seq_shard": {"cache_seq_shard": True},
+    "quant_kv+cache_seq_shard": {"quant_kv": True, "cache_seq_shard": True},
+    "capacity1": {"capacity": 1.0},
+    "expert_2d": {"expert_2d": True},
+    "expert_2d+capacity1": {"expert_2d": True, "capacity": 1.0},
+}
+
+
+def measure(arch: str, shape_id: str, variant: str, *, local_steps=2):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_id]
+    mesh = make_production_mesh(multi_pod=False)
+    spec = get_federation_spec(federation_kind(cfg), mesh)
+    fl = FLConfig(local_steps=local_steps)
+    knobs = dict(VARIANT_KNOBS[variant])
+    if knobs.pop("expert_2d", False):
+        import dataclasses
+        spec = dataclasses.replace(spec, expert_2d=True)
+    cap = knobs.pop("capacity", None)
+    if cap is not None:
+        import repro.models.moe as moe
+        moe.CAPACITY_FACTOR = cap
+
+    t0 = time.time()
+    if shape.kind == "train" or True:
+        # two-depth calibrated roofline (same methodology as the sweep)
+        L1, L2 = _calib_depths(cfg)
+        rls = []
+        for L in (L1, L2):
+            c, *_ = _compile_step(_at_depth(cfg, L), shape, mesh, spec, fl,
+                                  unroll=True, remat=False, **knobs)
+            rls.append(roofline.analyze(c, mesh.size))
+        rl = roofline.extrapolate(rls[0], rls[1], L1, L2, cfg.num_layers)
+    if cap is not None:
+        import repro.models.moe as moe
+        moe.CAPACITY_FACTOR = 1.25
+    out = rl.summary()
+    out["wall_s"] = round(time.time() - t0, 1)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", required=True)  # arch/shape
+    ap.add_argument("--variants", default="baseline,seq_shard")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+    arch, shape_id = args.pair.split("/")
+    os.makedirs(args.out, exist_ok=True)
+    results = {}
+    base_path = os.path.join("experiments/dryrun",
+                             f"{arch}_{shape_id}_single.json")
+    for v in args.variants.split(","):
+        if v == "baseline" and os.path.exists(base_path):
+            with open(base_path) as f:
+                results[v] = json.load(f)["roofline"]
+            print(f"[{v}] reused sweep artifact")
+        else:
+            print(f"[{v}] lowering...", flush=True)
+            results[v] = measure(arch, shape_id, v)
+        r = results[v]
+        print(f"  t_comp={r['t_compute_s']:.3e} t_mem={r['t_memory_s']:.3e} "
+              f"t_coll={r['t_collective_s']:.3e} bot={r['bottleneck']}",
+              flush=True)
+    tag = f"{arch}_{shape_id}".replace("/", "_")
+    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+        json.dump(results, f, indent=2, default=float)
+
+
+if __name__ == "__main__":
+    main()

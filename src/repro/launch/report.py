@@ -1,0 +1,85 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
+JSON artifacts.
+
+  PYTHONPATH=src python -m repro.launch.report --dir experiments/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_t(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}µs"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def fmt_b(x):
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x/div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def load(dirname):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(p) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | mesh | fed | clients | compile | temp/dev "
+           "(no-remat UB) | analytic/dev (remat) |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        am = r.get("analytic_memory") or {}
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['federation']} | {r['clients']} | {r['compile_s']}s | "
+            f"{fmt_b(r['memory'].get('temp_size_in_bytes', 0))} | "
+            f"{fmt_b(am.get('total', 0))} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows):
+    out = ["| arch | shape | t_compute | t_memory | t_collective | "
+           "bottleneck | MODEL/HLO flops | dominant collective |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != "16x16":
+            continue
+        rl = r["roofline"]
+        if "note" in rl:
+            continue
+        by = rl.get("coll_by_kind") or {}
+        dom = max(by, key=by.get) if by else "-"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_t(rl['t_compute_s'])} | "
+            f"{fmt_t(rl['t_memory_s'])} | {fmt_t(rl['t_collective_s'])} | "
+            f"**{rl['bottleneck']}** | {r['useful_flops_ratio']:.2f} | "
+            f"{dom} ({fmt_b(by.get(dom, 0))}) |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    print(f"## Dry-run ({len(rows)} artifacts)\n")
+    print(dryrun_table(rows))
+    print("\n## Roofline (single-pod 16x16, calibrated)\n")
+    print(roofline_table(rows))
+
+
+if __name__ == "__main__":
+    main()

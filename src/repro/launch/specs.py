@@ -1,0 +1,96 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every lowered program —
+weak-type-correct, shardable, zero allocation.
+
+Step kinds per input shape (DESIGN.md §4):
+  train_4k    -> fl_round(state, client_batches)
+  prefill_32k -> prefill_step(params, batch)
+  decode_32k  -> serve_step(params, cache, tokens)     cache_len = 32768
+  long_500k   -> serve_step(params, cache, tokens)     sub-quadratic path
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import ShapeDtypeStruct as SDS
+
+from repro.configs.base import FLConfig, ModelConfig, ShapeConfig
+from repro.models.model import Model, build_model
+
+# Architectures above this size train as 2 cross-silo clients (FSDP within
+# silo); smaller ones as one client per (pod, data) coordinate.
+CROSS_SILO_THRESHOLD = 10e9
+
+
+def federation_kind(cfg: ModelConfig) -> str:
+    return ("cross_silo" if cfg.param_count() > CROSS_SILO_THRESHOLD
+            else "cross_device")
+
+
+def _struct(tree):
+    return jax.tree.map(lambda x: SDS(x.shape, x.dtype), tree)
+
+
+def params_struct(model: Model):
+    return jax.eval_shape(model.init, jax.random.key(0))
+
+
+def _frontend_extras(cfg: ModelConfig, lead: Tuple[int, ...]) -> Dict:
+    out = {}
+    if cfg.encoder_layers:
+        out["frames"] = SDS(lead + (cfg.encoder_seq, cfg.d_model),
+                            jnp.bfloat16)
+    if cfg.num_image_tokens:
+        out["image_embeds"] = SDS(lead + (cfg.num_image_tokens, cfg.d_model),
+                                  jnp.bfloat16)
+    return out
+
+
+def train_specs(model: Model, shape: ShapeConfig, fl: FLConfig,
+                clients: int) -> Dict[str, Any]:
+    """FL-round batch struct: leaves (C, K, b, ...)."""
+    cfg = model.cfg
+    C, K = clients, fl.local_steps
+    b = max(1, shape.global_batch // C)
+    lead = (C, K, b)
+    batch = {"tokens": SDS(lead + (shape.seq_len,), jnp.int32),
+             "labels": SDS(lead + (shape.seq_len,), jnp.int32)}
+    batch.update(_frontend_extras(cfg, lead))
+    return batch
+
+
+def prefill_specs(model: Model, shape: ShapeConfig) -> Dict[str, Any]:
+    cfg = model.cfg
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": SDS((B, S), jnp.int32)}
+    batch.update(_frontend_extras(cfg, (B,)))
+    return batch
+
+
+def decode_specs(model: Model, shape: ShapeConfig,
+                 window: Optional[int],
+                 quant_kv: bool = False) -> Tuple[Any, Any]:
+    """(cache_struct, tokens_struct)."""
+    cfg = model.cfg
+    B, S = shape.global_batch, shape.seq_len
+    cache_len = model.cache_len_for(S, window)
+    cache = jax.eval_shape(lambda: model.init_cache(B, cache_len,
+                                                    quant_kv=quant_kv))
+    if cfg.encoder_layers:
+        kv = SDS((cfg.num_layers, B, cfg.encoder_seq, cfg.num_kv_heads,
+                  cfg.head_dim), model.dtype)
+        cache = dict(cache)
+        cache["enc_kv"] = {"xk": kv, "xv": kv}
+    tokens = SDS((B, 1), jnp.int32)
+    return cache, tokens
+
+
+def decode_window(cfg: ModelConfig, shape: ShapeConfig) -> Optional[int]:
+    """Sliding window policy: only the long-context shape uses it, and only
+    when the config defines one (all attention-bearing archs do; pure-SSM
+    archs have no attention cache at all)."""
+    if shape.name == "long_500k" and cfg.sliding_window:
+        return cfg.sliding_window
+    return None

@@ -1,0 +1,62 @@
+"""Step-function builders shared by dryrun/train/serve drivers."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig
+from repro.core import (get_client_opt, get_server_opt, init_fl_state,
+                        make_fl_round, make_loss)
+from repro.models.model import Model
+
+
+def make_train_step(model: Model, fl: FLConfig, *, num_rounds: int = 1000,
+                    use_pallas: bool = False, remat: bool = False):
+    """One federated round over the (C, K, b, ...) batch layout."""
+    copt = get_client_opt(fl.client_opt, fl, use_pallas=use_pallas)
+    sopt = get_server_opt(fl.server_opt)
+
+    def base_loss(params, batch):
+        from repro.models.common import remat_blocks
+        with remat_blocks(remat):
+            return model.loss(params, batch, use_pallas=use_pallas)
+
+    loss_fn = make_loss(base_loss, fedprox_mu=fl.fedprox_mu)
+    round_fn = make_fl_round(loss_fn, copt, sopt, num_rounds=num_rounds,
+                             weighted=fl.weighted_agg)
+
+    def train_step(state, client_batches):
+        new_state, metrics, _ = round_fn(state, client_batches)
+        return new_state, metrics
+
+    return train_step, sopt
+
+
+def make_prefill_step(model: Model, *, window: Optional[int] = None,
+                      use_pallas: bool = False):
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch, window=window,
+                                      use_pallas=use_pallas)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_serve_step(model: Model, *, window: Optional[int] = None,
+                    greedy: bool = True):
+    def serve_step(params, cache, tokens):
+        logits, cache = model.decode_step(params, cache, tokens,
+                                          window=window)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, cache
+
+    return serve_step
+
+
+def abstract_fl_state(model: Model, sopt):
+    """FLState ShapeDtypeStructs without allocating params."""
+    pstruct = jax.eval_shape(model.init, jax.random.key(0))
+    return jax.eval_shape(lambda p: init_fl_state(p, sopt), pstruct)

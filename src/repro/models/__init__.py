@@ -1,0 +1,3 @@
+from repro.models.model import Model, build_model, count_params_analytic
+
+__all__ = ["Model", "build_model", "count_params_analytic"]

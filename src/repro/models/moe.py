@@ -1,0 +1,99 @@
+"""Mixture-of-Experts layer: token-choice top-k routing with capacity-based
+scatter dispatch (TPU-friendly: static shapes, grouped einsum over an
+expert-sharded buffer; SPMD inserts the all-to-all at the scatter/gather).
+
+Supports shared experts (DeepSeek-V3) and an auxiliary load-balance loss,
+which is accumulated into a loss-carry threaded through the layer stack.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, shard_logical, split_keys
+
+CAPACITY_FACTOR = 1.25
+
+
+def init_moe(key, cfg, dtype):
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.expert_d_ff
+    ks = split_keys(key, 5)
+    p = {
+        "router": dense_init(ks[0], (D, E), dtype, fan_in=D),
+        "w_gate": dense_init(ks[1], (E, D, F), dtype, fan_in=D),
+        "w_in": dense_init(ks[2], (E, D, F), dtype, fan_in=D),
+        "w_out": dense_init(ks[3], (E, F, D), dtype, fan_in=F),
+    }
+    if cfg.num_shared_experts:
+        Fs = cfg.expert_d_ff * cfg.num_shared_experts
+        sk = split_keys(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(sk[0], (D, Fs), dtype, fan_in=D),
+            "w_in": dense_init(sk[1], (D, Fs), dtype, fan_in=D),
+            "w_out": dense_init(sk[2], (Fs, D), dtype, fan_in=Fs),
+        }
+    return p
+
+
+def _capacity(T: int, E: int, k: int) -> int:
+    c = int(T * k * CAPACITY_FACTOR / E)
+    return max(4, ((c + 3) // 4) * 4)
+
+
+def apply_moe(params, x, cfg):
+    """x: (B,S,D) -> (out, aux_loss).
+
+    Dispatch: top-k per token; position-in-expert via cumsum over the
+    flattened token stream; tokens beyond expert capacity are dropped
+    (their residual path still carries them, standard Switch behaviour).
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    T = B * S
+    C = _capacity(T, E, K)
+    xt = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xt, params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, K)                  # (T,K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # ---- aux load-balance loss (Switch eq. 4 generalised to top-k) ----
+    me = jnp.mean(probs, axis=0)                              # (E,)
+    onehot_any = jax.nn.one_hot(idx, E, dtype=jnp.float32)    # (T,K,E)
+    ce = jnp.mean(jnp.sum(onehot_any, axis=1), axis=0)        # frac routed
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce) / K
+
+    # ---- position-in-expert via cumsum over the flattened (T*K,) stream ---
+    flat_e = idx.reshape(T * K)                               # expert ids
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)       # (TK,E)
+    pos = jnp.cumsum(onehot, axis=0) - 1                      # pos within e
+    pos = jnp.sum(pos * onehot, axis=-1)                      # (TK,)
+    keep = pos < C
+    slot = jnp.where(keep, flat_e * C + pos, E * C)           # drop slot
+
+    # ---- scatter tokens into (E*C+1, D) expert buffer ----
+    tok_ids = jnp.repeat(jnp.arange(T), K)
+    buf = jnp.zeros((E * C + 1, D), x.dtype).at[slot].set(xt[tok_ids],
+                                                          mode="drop")
+    buf = buf[:E * C].reshape(E, C, D)
+    buf = shard_logical(buf, ("experts", None, None))
+
+    # ---- grouped expert FFN ----
+    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_in"])
+    h = jax.nn.silu(g) * u
+    eo = jnp.einsum("ecf,efd->ecd", h, params["w_out"])
+    eo = shard_logical(eo, ("experts", None, None))
+
+    # ---- gather back + combine with gate weights ----
+    eo_flat = jnp.concatenate(
+        [eo.reshape(E * C, D), jnp.zeros((1, D), x.dtype)], axis=0)
+    per_slot = eo_flat[slot] * gate_vals.reshape(T * K)[:, None].astype(x.dtype)
+    out = jnp.zeros((T, D), x.dtype).at[tok_ids].add(per_slot)
+
+    if "shared" in params:
+        sp = params["shared"]
+        h = jax.nn.silu(xt @ sp["w_gate"]) * (xt @ sp["w_in"])
+        out = out + h @ sp["w_out"]
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,93 @@
+"""Small models for the faithful paper reproduction: an MLP and the paper's
+shallow CNN (two conv + two FC, ReLU; dropout omitted — deterministic repro).
+
+Interface mirrors the big models: init(key) -> params, loss(params, batch).
+Batch: {"x": (B, ...), "y": (B,) int32}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_tasks import CNNConfig, MLPConfig
+from repro.models.common import dense_init, split_keys
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def init_mlp_model(key, cfg: MLPConfig, dtype=jnp.float32):
+    dims = (cfg.input_dim,) + cfg.hidden_dims + (cfg.num_classes,)
+    ks = split_keys(key, len(dims) - 1)
+    return {f"l{i}": {"w": dense_init(ks[i], (dims[i], dims[i + 1]), dtype),
+                      "b": jnp.zeros((dims[i + 1],), dtype)}
+            for i in range(len(dims) - 1)}
+
+
+def mlp_logits(params, x):
+    n = len(params)
+    for i in range(n):
+        x = x @ params[f"l{i}"]["w"] + params[f"l{i}"]["b"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Shallow CNN (paper's MNIST/FMNIST model)
+# ---------------------------------------------------------------------------
+def init_cnn_model(key, cfg: CNNConfig, dtype=jnp.float32):
+    c1, c2 = cfg.conv_channels
+    ks = split_keys(key, 4)
+    # after two stride-2 3x3 convs: spatial /4
+    flat = (cfg.image_size // 4) ** 2 * c2
+    return {
+        "conv1": {"w": dense_init(ks[0], (3, 3, cfg.channels, c1), dtype,
+                                  fan_in=9 * cfg.channels),
+                  "b": jnp.zeros((c1,), dtype)},
+        "conv2": {"w": dense_init(ks[1], (3, 3, c1, c2), dtype,
+                                  fan_in=9 * c1),
+                  "b": jnp.zeros((c2,), dtype)},
+        "fc1": {"w": dense_init(ks[2], (flat, cfg.fc_dim), dtype),
+                "b": jnp.zeros((cfg.fc_dim,), dtype)},
+        "fc2": {"w": dense_init(ks[3], (cfg.fc_dim, cfg.num_classes), dtype),
+                "b": jnp.zeros((cfg.num_classes,), dtype)},
+    }
+
+
+def cnn_logits(params, x):
+    """x: (B, H, W, C)."""
+    def conv(x, p):
+        y = jax.lax.conv_general_dilated(
+            x, p["w"], window_strides=(2, 2), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return jax.nn.relu(y + p["b"])
+
+    x = conv(x, params["conv1"])
+    x = conv(x, params["conv2"])
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# Shared loss / metrics
+# ---------------------------------------------------------------------------
+def softmax_ce(logits, y):
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - ll)
+
+
+def accuracy(logits, y):
+    return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+
+
+def make_small_model(cfg):
+    """Returns (init_fn, logits_fn) for an MLPConfig or CNNConfig."""
+    if isinstance(cfg, MLPConfig):
+        return (lambda key, dtype=jnp.float32: init_mlp_model(key, cfg, dtype),
+                mlp_logits)
+    return (lambda key, dtype=jnp.float32: init_cnn_model(key, cfg, dtype),
+            cnn_logits)

@@ -1,0 +1,429 @@
+"""Recurrent mixers: Mamba2 (SSD, chunked) and xLSTM (mLSTM / sLSTM).
+
+All three expose:
+  *_full(params, x, cfg, build_cache=...) -> (y, cache|None)   train/prefill
+  *_step(params, x, cfg, cache)           -> (y, cache)        decode (O(1))
+
+Mamba2 follows the SSD chunked algorithm (intra-chunk parallel matmul +
+inter-chunk state scan) — the same structure the Pallas kernel
+(repro/kernels/mamba2_scan) accelerates. mLSTM uses the stabilized
+chunk-summarised form; sLSTM is inherently sequential (lax.scan over time),
+which is faithful to the architecture.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init, rmsnorm, split_keys
+
+
+def _chunk_len(S: int, target: int = 64) -> int:
+    for c in range(min(target, S), 0, -1):
+        if S % c == 0:
+            return c
+    return 1
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+def mamba2_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_head_dim
+    H = d_in // P
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    return d_in, H, P, G, N
+
+
+def init_mamba2(key, cfg, dtype):
+    D = cfg.d_model
+    d_in, H, P, G, N = mamba2_dims(cfg)
+    conv_ch = d_in + 2 * G * N
+    ks = split_keys(key, 6)
+    # dt bias: softplus^-1 of dt ~ U[1e-3, 1e-1] (mamba2 default)
+    u = jax.random.uniform(ks[4], (H,), jnp.float32,
+                           np.log(1e-3), np.log(1e-1))
+    dt = jnp.exp(u)
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "w_zx": dense_init(ks[0], (D, d_in + conv_ch), dtype, fan_in=D),
+        "w_dt": dense_init(ks[1], (D, H), dtype, fan_in=D),
+        "dt_bias": dt_bias.astype(dtype),
+        "conv_w": dense_init(ks[2], (cfg.ssm_conv, conv_ch), dtype,
+                             fan_in=cfg.ssm_conv),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jax.random.uniform(ks[5], (H,), jnp.float32,
+                                            1.0, 16.0)).astype(dtype),
+        "D_skip": jnp.ones((H,), dtype),
+        "norm": jnp.ones((d_in,), dtype),
+        "w_out": dense_init(ks[3], (d_in, D), dtype, fan_in=d_in),
+    }
+
+
+def _causal_conv_full(x, w, b):
+    """x: (B,S,C) depthwise causal conv, kernel (K,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _ssd_chunked(xh, dt, A_log, Bm, Cm, h0=None, chunk=64):
+    """SSD scan (Mamba2 Alg. via chunking). xh:(B,S,H,P) dt:(B,S,H)
+    A_log:(H,) Bm/Cm:(B,S,G,N).
+
+    h_t = exp(dA_t)·h_{t-1} + dt_t·x_t⊗B_t ;   y_t = C_t·h_t
+    intra-chunk term is a masked (L,L) matmul; inter-chunk states scan.
+
+    Returns (y:(B,S,H,P), h_final:(B,H,P,N) fp32).
+    """
+    B, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    L = _chunk_len(S, chunk)
+    nc = S // L
+    rep = H // G
+    f32 = jnp.float32
+    dA = dt.astype(f32) * (-jnp.exp(A_log.astype(f32)))       # (B,S,H) <= 0
+
+    def rs(t):  # (B,S,...) -> (nc,B,L,...)
+        return jnp.moveaxis(t.reshape(B, nc, L, *t.shape[2:]), 1, 0)
+
+    xc = rs(xh.astype(f32))                                   # (nc,B,L,H,P)
+    dtc = rs(dt.astype(f32))                                  # (nc,B,L,H)
+    Bh = rs(jnp.repeat(Bm.astype(f32), rep, axis=2))          # (nc,B,L,H,N)
+    Ch = rs(jnp.repeat(Cm.astype(f32), rep, axis=2))
+    cs = jnp.cumsum(rs(dA), axis=2)                           # (nc,B,L,H)
+
+    # intra-chunk: M[q,k] = (C_q·B_k)·exp(cs_q - cs_k)·dt_k for k<=q
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]        # (nc,B,q,k,H)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    CB = jnp.einsum("cbqhn,cbkhn->cbqkh", Ch, Bh)
+    M = CB * decay * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("cbqkh,cbkhp->cbqhp", M, xc)
+
+    # per-chunk summary state: S_c = sum_k exp(cs_L - cs_k)·dt_k·B_k⊗x_k
+    w_end = jnp.exp(cs[:, :, -1:, :] - cs) * dtc              # (nc,B,L,H)
+    S_c = jnp.einsum("cbkh,cbkhn,cbkhp->cbhpn", w_end, Bh, xc)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                    # (nc,B,H)
+
+    h0 = (jnp.zeros((B, H, P, N), f32) if h0 is None else h0.astype(f32))
+
+    # State propagation scan carries only elementwise decay+add (cheap —
+    # XLA's cost model counts while bodies once, so keep FLOPs outside).
+    def body(h, inp):
+        s_c, cd = inp
+        h_new = cd[:, :, None, None] * h + s_c
+        return h_new, h  # emit the PRE-update state seen by this chunk
+
+    h_fin, h_prev = jax.lax.scan(body, h0, (S_c, chunk_decay))
+    # Inter-chunk output contribution, vectorised over all chunks at once.
+    y_inter = jnp.einsum("cbqhn,cbhpn,cbqh->cbqhp", Ch, h_prev, jnp.exp(cs))
+    y = y_intra + y_inter
+    y = jnp.moveaxis(y, 0, 1).reshape(B, S, H, P)
+    return y.astype(xh.dtype), h_fin
+
+
+def mamba2_full(params, x, cfg, *, build_cache=False, use_pallas=False):
+    B, S, D = x.shape
+    d_in, H, P, G, N = mamba2_dims(cfg)
+    zx = jnp.einsum("bsd,de->bse", x, params["w_zx"])
+    z, xc = zx[..., :d_in], zx[..., d_in:]
+    xc = jax.nn.silu(_causal_conv_full(xc, params["conv_w"],
+                                       params["conv_b"]))
+    xs = xc[..., :d_in].reshape(B, S, H, P)
+    Bm = xc[..., d_in:d_in + G * N].reshape(B, S, G, N)
+    Cm = xc[..., d_in + G * N:].reshape(B, S, G, N)
+    dt = jax.nn.softplus(jnp.einsum("bsd,dh->bsh", x, params["w_dt"])
+                         .astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    if use_pallas:
+        from repro.kernels.mamba2_scan import ops as m2_ops
+        y, h_fin = m2_ops.ssd_scan(xs, dt, params["A_log"], Bm, Cm)
+    else:
+        y, h_fin = _ssd_chunked(xs, dt, params["A_log"], Bm, Cm)
+    y = y + xs * params["D_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, S, d_in)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    cache = None
+    if build_cache:
+        K = cfg.ssm_conv
+        conv_ch = d_in + 2 * G * N
+        tail = zx[..., d_in:][:, -(K - 1):, :] if S >= K - 1 else jnp.pad(
+            zx[..., d_in:], ((0, 0), (K - 1 - S, 0), (0, 0)))
+        cache = {"ssm": h_fin.astype(x.dtype), "conv": tail}
+    return out, cache
+
+
+def mamba2_step(params, x, cfg, cache):
+    """x: (B,1,D). cache: ssm (B,H,P,N) fp-any, conv (B,K-1,conv_ch)."""
+    B = x.shape[0]
+    d_in, H, P, G, N = mamba2_dims(cfg)
+    K = cfg.ssm_conv
+    zx = jnp.einsum("bsd,de->bse", x, params["w_zx"])[:, 0]   # (B, ...)
+    z, xc_new = zx[..., :d_in], zx[..., d_in:]
+    conv_in = jnp.concatenate([cache["conv"], xc_new[:, None, :]], axis=1)
+    w = params["conv_w"]
+    xc = jnp.einsum("bkc,kc->bc", conv_in, w) + params["conv_b"]
+    xc = jax.nn.silu(xc)
+    xs = xc[..., :d_in].reshape(B, H, P)
+    Bm = xc[..., d_in:d_in + G * N].reshape(B, G, N)
+    Cm = xc[..., d_in + G * N:].reshape(B, G, N)
+    dt = jax.nn.softplus(jnp.einsum("bd,dh->bh", x[:, 0], params["w_dt"])
+                         .astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    dA = jnp.exp(dt * (-jnp.exp(params["A_log"].astype(jnp.float32))))
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)      # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    h = cache["ssm"].astype(jnp.float32)
+    h = dA[:, :, None, None] * h + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, xs.astype(jnp.float32), Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", h, Ch).astype(x.dtype)
+    y = y + xs * params["D_skip"].astype(x.dtype)[None, :, None]
+    y = y.reshape(B, d_in)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"])
+    out = jnp.einsum("be,ed->bd", y, params["w_out"])[:, None, :]
+    return out, {"ssm": h.astype(cache["ssm"].dtype), "conv": conv_in[:, 1:]}
+
+
+def init_mamba2_cache(cfg, B, dtype):
+    d_in, H, P, G, N = mamba2_dims(cfg)
+    conv_ch = d_in + 2 * G * N
+    return {"ssm": jnp.zeros((B, H, P, N), jnp.float32),
+            "conv": jnp.zeros((B, cfg.ssm_conv - 1, conv_ch), dtype)}
+
+
+# ===========================================================================
+# xLSTM — mLSTM (matrix memory)
+# ===========================================================================
+def mlstm_dims(cfg):
+    d_in = 2 * cfg.d_model          # proj factor 2
+    H = cfg.num_heads
+    d_qk = d_in // 2                # qk_dim_factor 0.5
+    return d_in, H, d_qk, d_in // H, d_qk // H
+
+
+def init_mlstm(key, cfg, dtype):
+    D = cfg.d_model
+    d_in, H, d_qk, hd_v, hd_k = mlstm_dims(cfg)
+    ks = split_keys(key, 7)
+    return {
+        "w_up": dense_init(ks[0], (D, 2 * d_in), dtype, fan_in=D),
+        "wq": dense_init(ks[1], (d_in, d_qk), dtype, fan_in=d_in),
+        "wk": dense_init(ks[2], (d_in, d_qk), dtype, fan_in=d_in),
+        "wv": dense_init(ks[3], (d_in, d_in), dtype, fan_in=d_in),
+        "w_if": dense_init(ks[4], (d_in, 2 * H), dtype, fan_in=d_in),
+        "b_if": jnp.concatenate([jnp.zeros((H,)),
+                                 jnp.linspace(3.0, 6.0, H)]).astype(dtype),
+        "norm": jnp.ones((d_in,), dtype),
+        "w_out": dense_init(ks[5], (d_in, D), dtype, fan_in=d_in),
+    }
+
+
+def _mlstm_chunked(q, k, v, i_pre, f_pre, chunk=256):
+    """Chunkwise stabilized mLSTM — exactly the recurrent semantics
+    (mlstm_step), evaluated L tokens at a time. q,k:(B,S,H,hk) v:(B,S,H,hv),
+    i_pre/f_pre:(B,S,H) gate pre-activations.
+
+    Intra-chunk work and the inter-chunk readout are vectorised over chunks;
+    the lax.scan carries only the elementwise (C, n, m) state combine.
+    Returns (y:(B,S,H,hv), final (C, n, m)) for decode continuation.
+    """
+    B, S, H, hk = q.shape
+    hv = v.shape[-1]
+    L = _chunk_len(S, chunk)
+    nc = S // L
+    f32 = jnp.float32
+    q = q.astype(f32)
+    k = k.astype(f32) / np.sqrt(hk)
+    v = v.astype(f32)
+    lf = jax.nn.log_sigmoid(f_pre.astype(f32))
+    li = i_pre.astype(f32)
+
+    def rs(t):  # (B,S,...) -> (nc,B,L,...)
+        return jnp.moveaxis(t.reshape(B, nc, L, *t.shape[2:]), 1, 0)
+
+    qc, kc, vc, lfc, lic = map(rs, (q, k, v, lf, li))
+    g = jnp.cumsum(lfc, axis=2)                       # (nc,B,L,H) inclusive
+    G = g[:, :, -1, :]                                # (nc,B,H) chunk decay
+
+    # chunk-local state summaries (local stabilizer mloc)
+    w = G[:, :, None, :] - g + lic                    # (nc,B,L,H)
+    mloc = jnp.max(w, axis=2)                         # (nc,B,H)
+    wexp = jnp.exp(w - mloc[:, :, None, :])
+    C_c = jnp.einsum("cblh,cblhk,cblhv->cbhkv", wexp, kc, vc)
+    n_c = jnp.einsum("cblh,cblhk->cbhk", wexp, kc)
+
+    # running-state combine: elementwise only (cheap scan body)
+    def body(carry, xs):
+        C, n, m = carry
+        Cc_, nc_, ml_, G_ = xs
+        m_new = jnp.maximum(G_ + m, ml_)
+        a = jnp.exp(G_ + m - m_new)
+        b = jnp.exp(ml_ - m_new)
+        return ((a[..., None, None] * C + b[..., None, None] * Cc_,
+                 a[..., None] * n + b[..., None] * nc_,
+                 m_new),
+                (C, n, m))  # emit PRE-chunk state
+
+    C0 = jnp.zeros((B, H, hk, hv), f32)
+    n0 = jnp.zeros((B, H, hk), f32)
+    m0 = jnp.zeros((B, H), f32)
+    (Cf, nf, mf), (Cp, np_, mp) = jax.lax.scan(body, (C0, n0, m0),
+                                               (C_c, n_c, mloc, G))
+
+    # intra-chunk decay matrix + combined row stabilizer
+    D = (g[:, :, :, None, :] - g[:, :, None, :, :]
+         + lic[:, :, None, :, :])                     # (nc,B,q,t,H)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    D = jnp.where(mask[None, None, :, :, None], D, -jnp.inf)
+    m_inter = g + mp[:, :, None, :]                   # (nc,B,L,H)
+    M = jnp.maximum(jnp.max(D, axis=3), m_inter)      # (nc,B,L,H)
+    Dexp = jnp.exp(D - M[:, :, :, None, :])
+    scores = jnp.einsum("cbqhe,cbthe->cbqth", qc, kc)
+    Sm = scores * Dexp
+    iw = jnp.exp(m_inter - M)                         # (nc,B,L,H)
+    num = (jnp.einsum("cbqth,cbthv->cbqhv", Sm, vc)
+           + iw[..., None] * jnp.einsum("cbqhk,cbhkv->cbqhv", qc, Cp))
+    qn = jnp.einsum("cbqhk,cbhk->cbqh", qc, np_)
+    den = jnp.maximum(jnp.abs(jnp.sum(Sm, axis=3) + iw * qn), jnp.exp(-M))
+    y = num / den[..., None]
+    y = jnp.moveaxis(y, 0, 1).reshape(B, S, H, hv)
+    return y, (Cf, nf, mf)
+
+
+def mlstm_full(params, x, cfg, *, build_cache=False):
+    B, S, D = x.shape
+    d_in, H, d_qk, hd_v, hd_k = mlstm_dims(cfg)
+    up = jnp.einsum("bsd,de->bse", x, params["w_up"])
+    xi, z = up[..., :d_in], up[..., d_in:]
+    q = (xi @ params["wq"]).reshape(B, S, H, hd_k)
+    k = (xi @ params["wk"]).reshape(B, S, H, hd_k)
+    v = (xi @ params["wv"]).reshape(B, S, H, hd_v)
+    gif = xi @ params["w_if"] + params["b_if"]
+    i_pre, f_pre = gif[..., :H], gif[..., H:]
+    y, (C, n, m) = _mlstm_chunked(q, k, v, i_pre, f_pre)
+    y = y.astype(x.dtype).reshape(B, S, d_in)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"])
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    cache = {"C": C, "n": n, "m": m} if build_cache else None
+    return out, cache
+
+
+def mlstm_step(params, x, cfg, cache):
+    B = x.shape[0]
+    d_in, H, d_qk, hd_v, hd_k = mlstm_dims(cfg)
+    f32 = jnp.float32
+    up = jnp.einsum("bsd,de->bse", x, params["w_up"])[:, 0]
+    xi, z = up[..., :d_in], up[..., d_in:]
+    q = (xi @ params["wq"]).reshape(B, H, hd_k).astype(f32)
+    k = (xi @ params["wk"]).reshape(B, H, hd_k).astype(f32) / np.sqrt(hd_k)
+    v = (xi @ params["wv"]).reshape(B, H, hd_v).astype(f32)
+    gif = (xi @ params["w_if"] + params["b_if"]).astype(f32)
+    logi, logf = gif[..., :H], jax.nn.log_sigmoid(gif[..., H:])
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(logf + m, logi)                       # (B,H)
+    fp = jnp.exp(logf + m - m_new)
+    ip = jnp.exp(logi - m_new)
+    C = fp[..., None, None] * C + ip[..., None, None] * (
+        k[..., :, None] * v[..., None, :])                    # (B,H,hk,hv)
+    n = fp[..., None] * n + ip[..., None] * k
+    num = jnp.einsum("bhkd,bhk->bhd", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).astype(x.dtype).reshape(B, d_in)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"])
+    out = jnp.einsum("be,ed->bd", y, params["w_out"])[:, None, :]
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+def init_mlstm_cache(cfg, B, dtype):
+    del dtype  # state kept in f32 for stability
+    d_in, H, d_qk, hd_v, hd_k = mlstm_dims(cfg)
+    return {"C": jnp.zeros((B, H, hd_k, hd_v), jnp.float32),
+            "n": jnp.zeros((B, H, hd_k), jnp.float32),
+            "m": jnp.zeros((B, H), jnp.float32)}
+
+
+# ===========================================================================
+# xLSTM — sLSTM (scalar memory, sequential by construction)
+# ===========================================================================
+def init_slstm(key, cfg, dtype):
+    D = cfg.d_model
+    H = cfg.num_heads
+    hd = D // H
+    ks = split_keys(key, 4)
+    d_ff = int(D * 4 / 3)
+    return {
+        "w_x": dense_init(ks[0], (D, 4 * D), dtype, fan_in=D),
+        "r": dense_init(ks[1], (H, hd, 4 * hd), dtype, fan_in=hd),
+        "b": jnp.concatenate([jnp.zeros((D,)), jnp.linspace(3.0, 6.0, D),
+                              jnp.zeros((2 * D,))]).astype(dtype),
+        "ff_gate": dense_init(ks[2], (D, d_ff), dtype, fan_in=D),
+        "ff_out": dense_init(ks[3], (d_ff, D), dtype, fan_in=d_ff),
+        "ff_norm": jnp.ones((D,), dtype),
+    }
+
+
+def _slstm_cell(params, pre_x, state, cfg):
+    """pre_x: (B,4D) = x_t @ W_x, precomputed outside the time scan (the
+    input projection is the FLOP-heavy part; hoisting it keeps the scan body
+    cheap and the dry-run cost analysis honest).
+    state: dict h,c,n,m each (B,D) f32."""
+    D = cfg.d_model
+    H = cfg.num_heads
+    hd = D // H
+    B = pre_x.shape[0]
+    f32 = jnp.float32
+    h = state["h"]
+    rec = jnp.einsum("bhk,hkg->bhg",
+                     h.reshape(B, H, hd).astype(params["r"].dtype),
+                     params["r"]).reshape(B, 4 * D)
+    pre = (pre_x + rec + params["b"]).astype(f32)
+    i_pre, f_pre, z_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + state["m"], i_pre)
+    fp = jnp.exp(logf + state["m"] - m_new)
+    ip = jnp.exp(i_pre - m_new)
+    c = fp * state["c"] + ip * jnp.tanh(z_pre)
+    n = fp * state["n"] + ip
+    hy = jax.nn.sigmoid(o_pre) * c / jnp.maximum(n, 1e-6)
+    return {"h": hy, "c": c, "n": n, "m": m_new}
+
+
+def slstm_full(params, x, cfg, *, build_cache=False):
+    B, S, D = x.shape
+    state0 = init_slstm_cache(cfg, B, x.dtype)
+    pre_x = jnp.einsum("bsd,dg->bsg", x, params["w_x"])   # hoisted
+
+    def body(state, pre_t):
+        state = _slstm_cell(params, pre_t, state, cfg)
+        return state, state["h"]
+
+    state, hs = jax.lax.scan(body, state0, jnp.moveaxis(pre_x, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)                # (B,S,D)
+    y = rmsnorm(y, params["ff_norm"])
+    ff = jax.nn.gelu((y @ params["ff_gate"]).astype(jnp.float32))
+    out = ff.astype(x.dtype) @ params["ff_out"]
+    return out, (state if build_cache else None)
+
+
+def slstm_step(params, x, cfg, cache):
+    pre_x = x[:, 0] @ params["w_x"]
+    state = _slstm_cell(params, pre_x, cache, cfg)
+    y = state["h"].astype(x.dtype)
+    y = rmsnorm(y, params["ff_norm"])
+    ff = jax.nn.gelu((y @ params["ff_gate"]).astype(jnp.float32))
+    out = (ff.astype(x.dtype) @ params["ff_out"])[:, None, :]
+    return out, state
+
+
+def init_slstm_cache(cfg, B, dtype):
+    del dtype
+    D = cfg.d_model
+    z = jnp.zeros((B, D), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": z}

@@ -1,0 +1,182 @@
+"""Roofline analysis from a compiled (dry-run) artifact.
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs / (chips × peak)          peak = 197 TFLOP/s bf16
+    memory     = HLO_bytes / (chips × hbm_bw)        hbm  = 819 GB/s
+    collective = Σ_ops coll_bytes·hops / (ici_bw)    ici  = 50 GB/s/link
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (whole-program,
+already per-partition under SPMD — we normalise either way, see below).
+Collective bytes are parsed out of the compiled HLO text: every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute,
+result-shape bytes × a ring-transfer factor from the replica-group size.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^\s]*)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    bytes: int
+    group_size: int
+
+    @property
+    def wire_bytes(self) -> float:
+        """Per-device bytes on the wire, ring algorithm."""
+        n = max(self.group_size, 2)
+        if self.kind == "all-reduce":
+            return 2 * (n - 1) / n * self.bytes
+        if self.kind in ("all-gather", "reduce-scatter"):
+            return (n - 1) / n * self.bytes
+        if self.kind == "all-to-all":
+            return (n - 1) / n * self.bytes
+        return self.bytes  # collective-permute: one hop
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nelem = int(np.prod([int(d) for d in dims.split(",") if d])) if dims \
+        else 1
+    return nelem * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
+    ops = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        tuple_part, dtype, dims, kind = m.groups()
+        if tuple_part is not None:
+            nbytes = sum(_shape_bytes(d, s) for d, s in
+                         _SHAPE_RE.findall(tuple_part))
+        else:
+            nbytes = _shape_bytes(dtype, dims)
+        gs = 0
+        mi = _GROUPS_IOTA_RE.search(line)
+        if mi:
+            gs = int(mi.group(2))
+        else:
+            ml = _GROUPS_LIST_RE.search(line)
+            if ml:
+                gs = len([x for x in ml.group(1).split(",") if x.strip()])
+        ops.append(CollectiveOp(kind, nbytes, gs or 2))
+    return ops
+
+
+@dataclass
+class Roofline:
+    flops: float                  # whole-program HLO flops
+    hbm_bytes: float
+    coll_bytes: float             # summed wire bytes (per device)
+    chips: int
+    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+    per_device: bool = True       # cost_analysis is per-partition under SPMD
+
+    @property
+    def t_compute(self) -> float:
+        f = self.flops if self.per_device else self.flops / self.chips
+        return f / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        b = self.hbm_bytes if self.per_device else self.hbm_bytes / self.chips
+        return b / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def summary(self) -> Dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "coll_by_kind": self.coll_by_kind,
+        }
+
+
+def analyze(compiled, chips: int) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    nbytes = float(ca.get("bytes accessed", 0.0))
+    ops = parse_collectives(compiled.as_text())
+    coll = sum(o.wire_bytes for o in ops)
+    by_kind: Dict[str, float] = {}
+    for o in ops:
+        by_kind[o.kind] = by_kind.get(o.kind, 0.0) + o.wire_bytes
+    return Roofline(flops, nbytes, coll, chips, by_kind)
+
+
+def extrapolate(r1: Roofline, r2: Roofline, l1: int, l2: int,
+                L: int) -> Roofline:
+    """Affine-in-depth extrapolation: programs are (fixed part) + L×(layer
+    part), so two depths determine the full-depth cost exactly. Used because
+    XLA cost_analysis counts while-loop bodies once (verified), making full
+    unrolls necessary — but unrolling an 81-layer model is prohibitive;
+    unrolling 1 and 2 pattern-cycles is not."""
+    def ext(a, b):
+        slope = (b - a) / (l2 - l1)
+        return max(0.0, a + slope * (L - l1))
+
+    kinds = set(r1.coll_by_kind) | set(r2.coll_by_kind)
+    by_kind = {k: ext(r1.coll_by_kind.get(k, 0.0),
+                      r2.coll_by_kind.get(k, 0.0)) for k in kinds}
+    return Roofline(ext(r1.flops, r2.flops),
+                    ext(r1.hbm_bytes, r2.hbm_bytes),
+                    ext(r1.coll_bytes, r2.coll_bytes),
+                    r1.chips, by_kind)
+
+
+def model_flops(cfg, tokens: int) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) — the 'useful
+    compute' denominator for the HLO-vs-model ratio. For inference steps
+    use 2·N·D."""
+    n = cfg.active_param_count()
+    return 6.0 * n * tokens
+
+
+def memory_analysis_summary(compiled) -> Dict:
+    ma = compiled.memory_analysis()
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out

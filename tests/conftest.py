@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests and benches run on the real single CPU device. Only
+# launch/dryrun.py installs the 512 placeholder devices (its own first line).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

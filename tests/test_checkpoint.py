@@ -1,0 +1,40 @@
+"""Checkpoint subsystem: save/restore round-trips FLState exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore, save
+from repro.core import get_server_opt, init_fl_state
+
+
+def test_roundtrip_flstate(tmp_path, rng):
+    params = {"w": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+              "b": {"x": jnp.asarray(rng.normal(size=(4,)), jnp.bfloat16)}}
+    sopt = get_server_opt("fedadam")
+    state = init_fl_state(params, sopt)
+    save(str(tmp_path), state, step=7)
+    restored, step = restore(str(tmp_path), like=state)
+    assert step == 7
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_keep_and_latest(tmp_path):
+    tree = {"w": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4, 5):
+        save(str(tmp_path), tree, step=s, keep=2)
+    assert latest_step(str(tmp_path)) == 5
+    # only last 2 kept
+    _, s = restore(str(tmp_path), like=tree)
+    assert s == 5
+    with pytest.raises(Exception):
+        restore(str(tmp_path), like=tree, step=1)
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    save(str(tmp_path), {"w": jnp.zeros((3,))}, step=0)
+    with pytest.raises(ValueError):
+        restore(str(tmp_path), like={"w": jnp.zeros((4,))})

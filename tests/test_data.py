@@ -1,0 +1,77 @@
+"""Data pipeline: Dirichlet partitioner + federated batching."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.dirichlet import client_label_histogram, dirichlet_partition
+from repro.data.pipeline import FederatedDataset
+from repro.data.synthetic import get_task
+
+
+def _skew(y, clients):
+    """Mean per-client label-distribution TV distance from uniform."""
+    h = client_label_histogram(y, clients).astype(np.float64)
+    p = h / np.maximum(h.sum(1, keepdims=True), 1)
+    u = 1.0 / p.shape[1]
+    return float(np.mean(np.abs(p - u).sum(1) / 2))
+
+
+def test_partition_sizes_and_determinism():
+    task = get_task("easy")
+    c1 = dirichlet_partition(task.y, 50, 0.1, 500, seed=3)
+    c2 = dirichlet_partition(task.y, 50, 0.1, 500, seed=3)
+    assert all(len(c) == 500 for c in c1)
+    for a, b in zip(c1, c2):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_skew_monotone_in_alpha():
+    """Paper Fig. 8: smaller α -> more heterogeneity."""
+    task = get_task("easy")
+    skews = [_skew(task.y, dirichlet_partition(task.y, 100, a, 500, seed=0))
+             for a in (1.0, 0.1, 0.01)]
+    assert skews[0] < skews[1] < skews[2], skews
+
+
+def test_variable_sizes():
+    task = get_task("easy")
+    rng = np.random.default_rng(0)
+    sizes = rng.integers(100, 501, 30)
+    clients = dirichlet_partition(task.y, 30, 0.1, seed=1,
+                                  variable_sizes=sizes)
+    assert [len(c) for c in clients] == list(sizes)
+
+
+def test_round_batch_shapes():
+    task = get_task("easy")
+    fed = FederatedDataset.build(task, num_clients=40, alpha=0.1, seed=0)
+    batches, w, ids = fed.sample_round(0.25, local_steps=3, batch_size=16)
+    assert batches["x"].shape == (10, 3, 16, task.x.shape[1])
+    assert batches["y"].shape == (10, 3, 16)
+    assert w.shape == (10,)
+    assert len(set(ids)) == 10  # without replacement
+
+
+@settings(max_examples=10, deadline=None)
+@given(alpha=st.floats(0.01, 2.0), m=st.integers(2, 30))
+def test_partition_property_all_indices_valid(alpha, m):
+    task = get_task("easy")
+    clients = dirichlet_partition(task.y, m, alpha, 100, seed=7)
+    for idx in clients:
+        assert idx.min() >= 0 and idx.max() < len(task.y)
+        assert len(idx) == 100
+
+
+def test_task_difficulty_ordering():
+    """Linear probes separate 'easy' better than 'hard' — the ladder the
+    transfer protocol relies on."""
+    from numpy.linalg import lstsq
+    accs = {}
+    for tid in ("easy", "hard"):
+        t = get_task(tid)
+        X = t.x[:5000].reshape(5000, -1)
+        Y = np.eye(t.num_classes)[t.y[:5000]]
+        W = lstsq(X, Y, rcond=None)[0]
+        Xt = t.x_test.reshape(len(t.y_test), -1)
+        accs[tid] = float((Xt @ W).argmax(1).__eq__(t.y_test).mean())
+    assert accs["easy"] > accs["hard"] + 0.15, accs

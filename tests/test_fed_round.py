@@ -1,0 +1,135 @@
+"""Integration tests for the jitted federated round vs a hand-written
+python reference of Algorithm 1."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (get_client_opt, get_server_opt, init_fl_state,
+                        make_fl_round, make_loss)
+
+D = 5
+
+
+def _quad_loss(params, batch):
+    r = batch["A"] @ params["x"] - batch["b"]
+    return 0.5 * jnp.mean(r * r), {}
+
+
+def _mk_batches(rng, C, K, n=8):
+    return {"A": jnp.asarray(rng.normal(size=(C, K, n, D)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(C, K, n)), jnp.float32)}
+
+
+def _reference_round(x0, batches, *, gamma=2.0, delta=0.1, eta0=0.2,
+                     theta0=1.0):
+    """Plain-python Algorithm 1 (FedAvg + Δ-SGD), one round."""
+    C, K = batches["A"].shape[:2]
+    finals = []
+    for i in range(C):
+        x = np.asarray(x0, np.float64).copy()
+        eta, theta = eta0, theta0
+        g_prev, gn_prev = None, None
+        for k in range(K):
+            A = np.asarray(batches["A"][i, k], np.float64)
+            b = np.asarray(batches["b"][i, k], np.float64)
+            g = A.T @ (A @ x - b) / A.shape[0]
+            if k == 0:
+                eta_k = eta0
+            else:
+                dg = np.linalg.norm(g - g_prev)
+                dx = eta * gn_prev
+                cand1 = gamma * dx / (2 * dg) if dg > 0 else np.inf
+                cand2 = np.sqrt(1 + delta * theta) * eta
+                eta_k = min(cand1, cand2)
+                theta = eta_k / eta
+            x = x - eta_k * g
+            g_prev, gn_prev, eta = g, np.linalg.norm(g), eta_k
+        finals.append(x)
+    return np.mean(finals, axis=0)
+
+
+def test_round_matches_reference(rng):
+    C, K = 3, 4
+    batches = _mk_batches(rng, C, K)
+    x0 = jnp.asarray(rng.normal(size=D), jnp.float32)
+
+    copt = get_client_opt("delta_sgd")
+    sopt = get_server_opt("fedavg")
+    rnd = jax.jit(make_fl_round(make_loss(_quad_loss), copt, sopt,
+                                num_rounds=10))
+    state = init_fl_state({"x": x0}, sopt)
+    state, metrics, locals_ = rnd(state, batches)
+    ref = _reference_round(x0, batches)
+    np.testing.assert_allclose(np.asarray(state.params["x"]), ref,
+                               rtol=2e-4, atol=2e-5)
+    assert locals_["x"].shape == (C, D)
+    assert np.isfinite(float(metrics["loss"]))
+
+
+def test_weighted_aggregation(rng):
+    C, K = 3, 2
+    batches = _mk_batches(rng, C, K)
+    x0 = jnp.zeros((D,), jnp.float32)
+    copt = get_client_opt("sgd", lr=0.05)
+    sopt = get_server_opt("fedavg")
+    rnd_w = jax.jit(make_fl_round(make_loss(_quad_loss), copt, sopt,
+                                  num_rounds=10, weighted=True))
+    state = init_fl_state({"x": x0}, sopt)
+    w = jnp.asarray([1.0, 0.0, 0.0])
+    state_w, _, locals_ = rnd_w(state, batches, client_weights=w)
+    # weight (1,0,0) -> global == client 0's local result
+    np.testing.assert_allclose(np.asarray(state_w.params["x"]),
+                               np.asarray(locals_["x"][0]), rtol=1e-5)
+
+
+def test_fedprox_changes_trajectory(rng):
+    C, K = 2, 3
+    batches = _mk_batches(rng, C, K)
+    x0 = jnp.asarray(rng.normal(size=D), jnp.float32)
+    copt = get_client_opt("sgd", lr=0.1)
+    sopt = get_server_opt("fedavg")
+    out = {}
+    for mu in (0.0, 10.0):
+        rnd = jax.jit(make_fl_round(make_loss(_quad_loss, fedprox_mu=mu),
+                                    copt, sopt, num_rounds=10))
+        state = init_fl_state({"x": x0}, sopt)
+        state, _, _ = rnd(state, batches)
+        out[mu] = np.asarray(state.params["x"])
+    # strong prox keeps locals near the global start
+    assert np.linalg.norm(out[10.0] - np.asarray(x0)) \
+        < np.linalg.norm(out[0.0] - np.asarray(x0))
+
+
+@pytest.mark.parametrize("server", ["fedavg", "fedavgm", "fedadam",
+                                    "fedyogi"])
+def test_server_optimizers_run(rng, server):
+    C, K = 2, 2
+    batches = _mk_batches(rng, C, K)
+    copt = get_client_opt("delta_sgd")
+    sopt = get_server_opt(server)
+    rnd = jax.jit(make_fl_round(make_loss(_quad_loss), copt, sopt,
+                                num_rounds=10))
+    state = init_fl_state({"x": jnp.zeros((D,), jnp.float32)}, sopt)
+    for _ in range(3):
+        state, metrics, _ = rnd(state, batches)
+    assert np.all(np.isfinite(np.asarray(state.params["x"])))
+
+
+@pytest.mark.parametrize("copt_name", ["sgd", "sgd_decay", "sgdm",
+                                       "sgdm_decay", "adam", "adagrad",
+                                       "sps", "delta_sgd"])
+def test_all_client_opts_reduce_loss(rng, copt_name):
+    C, K = 4, 6
+    batches = _mk_batches(rng, C, K, n=16)
+    copt = get_client_opt(copt_name, lr=0.05)
+    sopt = get_server_opt("fedavg")
+    rnd = jax.jit(make_fl_round(make_loss(_quad_loss), copt, sopt,
+                                num_rounds=30))
+    state = init_fl_state({"x": jnp.zeros((D,), jnp.float32) + 2.0}, sopt)
+    first = None
+    for t in range(30):
+        state, metrics, _ = rnd(state, batches)
+        if first is None:
+            first = float(metrics["loss"])
+    assert float(metrics["loss"]) < first

@@ -1,0 +1,116 @@
+"""Per-kernel allclose sweeps against the pure-jnp ref oracles
+(interpret=True executes the Pallas kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.delta_sgd import delta_sgd as dk
+from repro.kernels.delta_sgd import ref as dref
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mamba2_scan.ops import ssd_scan
+from repro.kernels.mamba2_scan.ref import ssd_ref
+
+
+# ---------------------------------------------------------------- delta_sgd
+@pytest.mark.parametrize("shape", [(7,), (128,), (1000,), (257, 33),
+                                   (8, 16, 9)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_delta_sgd_norms_sweep(shape, dtype, rng):
+    g = jnp.asarray(rng.normal(size=shape), dtype)
+    gp = jnp.asarray(rng.normal(size=shape), dtype)
+    dg, gg = dk.norms(g, gp, interpret=True)
+    dg_r, gg_r = dref.norms_ref(g, gp)
+    np.testing.assert_allclose(dg, dg_r, rtol=3e-3)
+    np.testing.assert_allclose(gg, gg_r, rtol=3e-3)
+
+
+@pytest.mark.parametrize("shape", [(5,), (1024,), (130, 7)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_delta_sgd_apply_sweep(shape, dtype, rng):
+    p = jnp.asarray(rng.normal(size=shape), dtype)
+    g = jnp.asarray(rng.normal(size=shape), dtype)
+    out = dk.apply_update(p, g, 0.37, interpret=True)
+    ref = dref.apply_ref(p, g, 0.37)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 600), seed=st.integers(0, 2**31 - 1))
+def test_delta_sgd_norms_property(n, seed):
+    r = np.random.default_rng(seed)
+    g = jnp.asarray(r.normal(size=n), jnp.float32)
+    gp = jnp.asarray(r.normal(size=n), jnp.float32)
+    dg, gg = dk.norms(g, gp, interpret=True)
+    np.testing.assert_allclose(dg, float(jnp.sum((g - gp) ** 2)), rtol=1e-4)
+    np.testing.assert_allclose(gg, float(jnp.sum(g ** 2)), rtol=1e-4)
+
+
+# ----------------------------------------------------------- flash attention
+@pytest.mark.parametrize("B,S,H,KV,hd,causal,window", [
+    (2, 256, 8, 4, 64, True, None),
+    (1, 128, 4, 1, 64, True, None),       # MQA
+    (2, 300, 4, 4, 32, True, None),       # non-multiple padding
+    (1, 512, 8, 2, 128, True, 128),       # sliding window
+    (2, 256, 4, 4, 64, False, None),      # bidirectional
+    (1, 64, 2, 2, 16, True, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, S, H, KV, hd, causal, window, dtype, rng):
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# ----------------------------------------------------------------- mamba2
+@pytest.mark.parametrize("B,S,H,P,G,N", [
+    (2, 128, 4, 32, 1, 16),
+    (1, 64, 8, 64, 2, 64),
+    (2, 192, 4, 64, 1, 64),
+    (1, 256, 2, 16, 1, 8),
+])
+def test_mamba2_ssd_sweep(B, S, H, P, G, N, rng):
+    x = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (B, S, H)), jnp.float32)
+    A_log = jnp.asarray(np.log(rng.uniform(1, 16, (H,))), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, S, G, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B, S, G, N)), jnp.float32)
+    y, h = ssd_scan(x, dt, A_log, Bm, Cm)
+    yr, hr = ssd_ref(x, dt, A_log, Bm, Cm)
+    np.testing.assert_allclose(y, yr, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(h, hr, rtol=1e-3, atol=1e-4)
+
+
+def test_mamba2_kernel_inside_model(rng):
+    """use_pallas path of the mamba2 block == jnp path."""
+    from repro.configs import get_config
+    from repro.models.ssm import init_mamba2, mamba2_full
+    cfg = get_config("zamba2-7b").reduced()
+    p = init_mamba2(jax.random.key(0), cfg, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(2, 64, cfg.d_model)), jnp.float32)
+    y0, _ = mamba2_full(p, x, cfg, use_pallas=False)
+    y1, _ = mamba2_full(p, x, cfg, use_pallas=True)
+    np.testing.assert_allclose(y0, y1, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_kernel_inside_model(rng):
+    from repro.configs import get_config
+    from repro.models.attention import init_attention, gqa_full
+    cfg = get_config("tinyllama-1.1b").reduced()
+    p = init_attention(jax.random.key(0), cfg, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(2, 128, cfg.d_model)), jnp.float32)
+    pos = jnp.arange(128)[None]
+    y0, _ = gqa_full(p, x, cfg, positions=pos, use_pallas=False)
+    y1, _ = gqa_full(p, x, cfg, positions=pos, use_pallas=True)
+    np.testing.assert_allclose(y0, y1, rtol=2e-3, atol=2e-3)

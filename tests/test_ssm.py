@@ -1,0 +1,101 @@
+"""Recurrent mixers: chunked forms vs exact sequential recurrences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import ssm
+
+_jmamba2_step = jax.jit(ssm.mamba2_step, static_argnames=("cfg",))
+_jmlstm_step = jax.jit(ssm.mlstm_step, static_argnames=("cfg",))
+_jslstm_step = jax.jit(ssm.slstm_step, static_argnames=("cfg",))
+
+
+@pytest.fixture
+def zcfg():
+    return get_config("zamba2-7b").reduced()
+
+
+@pytest.fixture
+def xcfg():
+    return get_config("xlstm-1.3b").reduced()
+
+
+def test_mamba2_full_vs_stepwise(zcfg, rng):
+    """Chunked SSD over S tokens == S recurrent decode steps."""
+    p = ssm.init_mamba2(jax.random.key(0), zcfg, jnp.float32)
+    B, S = 2, 37
+    x = jnp.asarray(rng.normal(size=(B, S, zcfg.d_model)) * 0.3, jnp.float32)
+    y_full, cache = ssm.mamba2_full(p, x, zcfg, build_cache=True)
+    c = ssm.init_mamba2_cache(zcfg, B, jnp.float32)
+    ys = []
+    for t in range(S):
+        y, c = _jmamba2_step(p, x[:, t:t + 1], zcfg, c)
+        ys.append(y)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(y_full, y_seq, rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(cache["ssm"], c["ssm"], rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(cache["conv"], c["conv"], rtol=1e-4,
+                               atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(S=st.integers(2, 70), seed=st.integers(0, 999))
+def test_mamba2_chunk_invariance(S, seed):
+    """Property: output independent of chunk length."""
+    cfg = get_config("zamba2-7b").reduced()
+    r = np.random.default_rng(seed)
+    B, H, P, G, N = 1, 4, 16, 1, 8
+    x = jnp.asarray(r.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(r.uniform(0.001, 0.2, (B, S, H)), jnp.float32)
+    A_log = jnp.asarray(np.log(r.uniform(1, 8, (H,))), jnp.float32)
+    Bm = jnp.asarray(r.normal(size=(B, S, G, N)), jnp.float32)
+    Cm = jnp.asarray(r.normal(size=(B, S, G, N)), jnp.float32)
+    y1, h1 = ssm._ssd_chunked(x, dt, A_log, Bm, Cm, chunk=64)
+    y2, h2 = ssm._ssd_chunked(x, dt, A_log, Bm, Cm, chunk=7)
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(h1, h2, rtol=1e-4, atol=1e-5)
+
+
+def test_mlstm_full_vs_stepwise(xcfg, rng):
+    p = ssm.init_mlstm(jax.random.key(1), xcfg, jnp.float32)
+    B, S = 2, 29
+    x = jnp.asarray(rng.normal(size=(B, S, xcfg.d_model)) * 0.3, jnp.float32)
+    y_full, cache = ssm.mlstm_full(p, x, xcfg, build_cache=True)
+    c = ssm.init_mlstm_cache(xcfg, B, jnp.float32)
+    ys = []
+    for t in range(S):
+        y, c = _jmlstm_step(p, x[:, t:t + 1], xcfg, c)
+        ys.append(y)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(y_full, y_seq, rtol=3e-3, atol=3e-4)
+    np.testing.assert_allclose(cache["C"], c["C"], rtol=3e-3, atol=3e-4)
+    np.testing.assert_allclose(cache["m"], c["m"], rtol=1e-4, atol=1e-5)
+
+
+def test_slstm_full_vs_stepwise(xcfg, rng):
+    p = ssm.init_slstm(jax.random.key(2), xcfg, jnp.float32)
+    B, S = 2, 17
+    x = jnp.asarray(rng.normal(size=(B, S, xcfg.d_model)) * 0.3, jnp.float32)
+    y_full, cache = ssm.slstm_full(p, x, xcfg, build_cache=True)
+    c = ssm.init_slstm_cache(xcfg, B, jnp.float32)
+    ys = []
+    for t in range(S):
+        y, c = _jslstm_step(p, x[:, t:t + 1], xcfg, c)
+        ys.append(y)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(y_full, y_seq, rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(cache["h"], c["h"], rtol=2e-3, atol=2e-4)
+
+
+def test_mlstm_gate_stability(xcfg, rng):
+    """Extreme gate pre-activations must not produce NaN/Inf (the
+    stabilizer m is the whole point)."""
+    p = ssm.init_mlstm(jax.random.key(3), xcfg, jnp.float32)
+    p = dict(p)
+    p["b_if"] = p["b_if"] + 40.0  # huge input-gate bias
+    x = jnp.asarray(rng.normal(size=(1, 24, xcfg.d_model)) * 3, jnp.float32)
+    y, _ = ssm.mlstm_full(p, x, xcfg)
+    assert np.all(np.isfinite(np.asarray(y)))

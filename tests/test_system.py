@@ -1,0 +1,64 @@
+"""End-to-end system behaviour: the full FL pipeline (data partitioning →
+client sampling → K local Δ-SGD steps → aggregation) learns a non-iid
+synthetic task without tuning, and the paper's headline transfer claim
+holds in miniature."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_tasks import MLP_SMALL
+from repro.core import (get_client_opt, get_server_opt, init_fl_state,
+                        make_fl_round, make_loss)
+from repro.data.pipeline import FederatedDataset
+from repro.data.synthetic import get_task
+from repro.models.small import accuracy, make_small_model, softmax_ce
+
+
+def _train(task_id, opt_name, rounds=60, alpha=0.1, lr=0.05, seed=0):
+    task = get_task(task_id, seed=seed)
+    fed = FederatedDataset.build(task, num_clients=60, alpha=alpha,
+                                 seed=seed)
+    init_fn, logits_fn = make_small_model(MLP_SMALL)
+    loss_fn = make_loss(
+        lambda p, b: (softmax_ce(logits_fn(p, b["x"]), b["y"]), {}))
+    copt = get_client_opt(opt_name, lr=lr)
+    sopt = get_server_opt("fedavg")
+    rnd = jax.jit(make_fl_round(loss_fn, copt, sopt, num_rounds=rounds))
+    state = init_fl_state(init_fn(jax.random.key(seed)), sopt)
+    for _ in range(rounds):
+        batches, w, _ = fed.sample_round(0.1, local_steps=7, batch_size=64)
+        state, metrics, _ = rnd(state, {"x": jnp.asarray(batches["x"]),
+                                        "y": jnp.asarray(batches["y"])})
+    xt, yt = fed.test_batch(2000)
+    return float(accuracy(logits_fn(state.params, jnp.asarray(xt)),
+                          jnp.asarray(yt))), metrics
+
+
+def test_delta_sgd_learns_easy_task():
+    acc, metrics = _train("easy", "delta_sgd", rounds=40)
+    assert acc > 0.9, acc
+    assert 0 < float(metrics["eta_mean"]) < 10
+
+
+def test_delta_sgd_non_iid_robustness():
+    """α = 0.01 (pathological skew) still learns."""
+    acc, _ = _train("easy", "delta_sgd", rounds=60, alpha=0.01)
+    assert acc > 0.75, acc
+
+
+def test_transfer_claim_miniature():
+    """The paper's core claim: with a step size tuned elsewhere (lr=3.0 —
+    badly mis-tuned for this task), Δ-SGD (which ignores lr entirely)
+    clearly beats mis-tuned SGDM on 'medium' (the task with stable
+    signal at this round budget)."""
+    acc_delta, _ = _train("medium", "delta_sgd", rounds=50)
+    acc_mistuned, _ = _train("medium", "sgdm", rounds=50, lr=3.0)
+    assert acc_delta > acc_mistuned + 0.05, (acc_delta, acc_mistuned)
+
+
+def test_eta_adapts_per_round():
+    """Step sizes settle away from η0 — the rule is actually engaging."""
+    _, metrics = _train("hard", "delta_sgd", rounds=25)
+    eta = float(metrics["eta_mean"])
+    assert eta > 0 and abs(eta - 0.2) > 1e-3

@@ -1,0 +1,155 @@
+"""Theory checks: the convex Lyapunov decrease (paper Eq. 5 / Thm 5) and
+convergence of the distributed scheme on least squares."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+GAMMA, DELTA = 1.0, 1.0   # Thm 5 setting uses the undamped rule (γ=1, δ=1)
+
+
+def _make_problem(m=4, d=6, seed=0, interpolation=True):
+    """m clients, each f_i(x) = 0.5‖A_i x − b_i‖²; convex, different local
+    smoothness per client. Thm 5's monotone Lyapunov needs a COMMON
+    minimizer (x* minimises every f_i — the paper's 'x* is any minimum of
+    f_i for all i' condition), so by default b_i = A_i x*."""
+    rng = np.random.default_rng(seed)
+    x_star = rng.normal(size=d).astype(np.float32)
+    As, bs = [], []
+    for i in range(m):
+        scale = 0.5 + 2.0 * i           # heterogeneous L_i
+        Ai = scale * rng.normal(size=(12, d)).astype(np.float32)
+        As.append(Ai)
+        if interpolation:
+            bs.append(Ai @ x_star)
+        else:
+            bs.append(rng.normal(size=(12,)).astype(np.float32))
+    if not interpolation:
+        A = np.concatenate(As)
+        b = np.concatenate(bs)
+        x_star = np.linalg.lstsq(A, b, rcond=None)[0].astype(np.float32)
+    return As, bs, x_star
+
+
+def _fi(Ai, bi, x):
+    r = Ai @ x - bi
+    return 0.5 * float(r @ r)
+
+
+def _gi(Ai, bi, x):
+    return Ai.T @ (Ai @ x - bi)
+
+
+def test_lyapunov_decrease_convex():
+    """Run Alg. 1 with K=1, p=1, full batch (the Thm 5 setting) and check
+    the Lyapunov function of Eq. (5) is non-increasing after the first
+    couple of iterations (the bound needs one step of warm-up for θ)."""
+    m, d = 4, 6
+    As, bs, x_star = _make_problem(m, d)
+    x = np.zeros(d, np.float32)
+    xs_prev = [x.copy() for _ in range(m)]       # x_{t-1}^i
+    etas = [0.05] * m
+    thetas = [0.0] * m
+    gs_prev = [_gi(As[i], bs[i], x) for i in range(m)]
+
+    def lyapunov(x, xs_i, xs_prev_i, etas, thetas):
+        v = float(np.sum((x - x_star) ** 2))
+        v += sum(np.sum((xs_i[i] - xs_prev_i[i]) ** 2)
+                 for i in range(m)) / (2 * m)
+        v += 2 / m * sum(etas[i] * thetas[i]
+                         * (_fi(As[i], bs[i], xs_prev_i[i])
+                            - _fi(As[i], bs[i], x_star))
+                         for i in range(m))
+        return v
+
+    vals = []
+    xs_i = [x.copy() for _ in range(m)]
+    for t in range(40):
+        new_xs, new_etas, new_thetas = [], [], []
+        for i in range(m):
+            g = _gi(As[i], bs[i], xs_i[i])
+            dg = np.linalg.norm(g - gs_prev[i])
+            dx = np.linalg.norm(xs_i[i] - xs_prev[i])
+            cand1 = GAMMA * dx / (2 * dg) if dg > 0 else np.inf
+            cand2 = np.sqrt(1 + DELTA * thetas[i]) * etas[i]
+            eta = min(cand1, cand2)
+            new_xs.append(xs_i[i] - eta * g)
+            new_thetas.append(eta / etas[i])
+            new_etas.append(eta)
+            gs_prev[i] = g
+        xs_prev = [a.copy() for a in xs_i]
+        xs_i = new_xs
+        x = np.mean(xs_i, axis=0)
+        etas, thetas = new_etas, new_thetas
+        vals.append(lyapunov(x, xs_i, xs_prev, etas, thetas))
+    vals = np.asarray(vals[2:])
+    diffs = np.diff(vals)
+    # Eq. (5): non-increasing, up to fp noise near the fixed point
+    assert np.all(diffs <= 1e-3 + 1e-2 * vals[:-1]), (vals, diffs)
+    assert vals[-1] < 1e-2 * vals[0]  # and it actually converges
+
+
+def test_fl_round_converges_on_least_squares():
+    """Full pipeline (make_fl_round + delta_sgd) drives the global least
+    squares objective near optimum without any tuning."""
+    from repro.core import (get_client_opt, get_server_opt, init_fl_state,
+                            make_fl_round, make_loss)
+    m, d = 4, 6
+    As, bs, x_star = _make_problem(m, d)
+    A = jnp.asarray(np.stack(As))       # (m, n, d)
+    B = jnp.asarray(np.stack(bs))
+
+    def base_loss(params, batch):
+        # mean (not sum): η0 = 0.2 must not blow up the first local step
+        # (paper §3: "η0 should be sufficiently small")
+        r = batch["A"] @ params["x"] - batch["b"]
+        return 0.5 * jnp.mean(r * r), {}
+
+    loss_fn = make_loss(base_loss)
+    copt = get_client_opt("delta_sgd")
+    sopt = get_server_opt("fedavg")
+    rnd = jax.jit(make_fl_round(loss_fn, copt, sopt, num_rounds=100))
+    state = init_fl_state({"x": jnp.zeros((d,), jnp.float32)}, sopt)
+    K = 3
+    batches = {"A": jnp.broadcast_to(A[:, None], (m, K) + A.shape[1:]),
+               "b": jnp.broadcast_to(B[:, None], (m, K) + B.shape[1:])}
+    for _ in range(100):
+        state, metrics, _ = rnd(state, batches)
+    err = float(jnp.linalg.norm(state.params["x"] - jnp.asarray(x_star)))
+    assert err < 0.15, err
+
+
+def test_rate_beats_lmax_baseline():
+    """Thm/preliminaries claim: per-client adaptive steps beat the crude
+    1/L_max global step when smoothness is heterogeneous."""
+    m, d = 4, 6
+    As, bs, x_star = _make_problem(m, d)
+    Ls = [np.linalg.norm(Ai.T @ Ai, 2) for Ai in As]
+    eta_crude = 1.0 / max(Ls)
+
+    def run(adaptive, T=60):
+        xs = [np.zeros(d, np.float32) for _ in range(m)]
+        etas, thetas = [1e-3] * m, [1.0] * m
+        xp = [x.copy() for x in xs]
+        gp = [_gi(As[i], bs[i], xs[i]) for i in range(m)]
+        for t in range(T):
+            nxt = []
+            for i in range(m):
+                g = _gi(As[i], bs[i], xs[i])
+                if adaptive:
+                    dg = np.linalg.norm(g - gp[i])
+                    dx = np.linalg.norm(xs[i] - xp[i])
+                    cand1 = dx / (2 * dg) if dg > 0 else np.inf
+                    eta = min(cand1, np.sqrt(1 + thetas[i]) * etas[i])
+                    thetas[i], etas[i] = eta / etas[i], eta
+                else:
+                    eta = eta_crude
+                xp[i], gp[i] = xs[i].copy(), g
+                nxt.append(xs[i] - eta * g)
+            mean = np.mean(nxt, axis=0)
+            xs = [mean.copy() for _ in range(m)]   # aggregate each round
+        f = sum(_fi(As[i], bs[i], mean) for i in range(m)) / m
+        fstar = sum(_fi(As[i], bs[i], x_star) for i in range(m)) / m
+        return f - fstar
+
+    assert run(True) < run(False), (run(True), run(False))
