@@ -58,8 +58,12 @@ def run_fl(opt_name: str, task_id: str, *, alpha: float = 0.1,
            fedprox_mu: float = 0.0, delta: float = 0.1,
            local_epochs: int = 1, batch: int = 64, num_clients: int = 60,
            participation: float = 0.1, weighted: bool = False,
-           variable_sizes: bool = False, seed: int = 0) -> Dict:
-    """One FL training run; returns final test accuracy + timing."""
+           variable_sizes: bool = False, seed: int = 0,
+           engine: str = "vmap") -> Dict:
+    """One FL training run; returns final test accuracy + timing.
+
+    ``engine="flat"`` switches Δ-SGD runs onto the packed flat-parameter
+    round engine (core/fed_round flat path)."""
     fed = _fed(task_id, alpha, num_clients, seed, variable_sizes)
     init_fn, logits_fn = make_small_model(MODELS[model])
     loss_fn = make_loss(
@@ -72,8 +76,13 @@ def run_fl(opt_name: str, task_id: str, *, alpha: float = 0.1,
         kw["delta"] = delta
     copt = get_client_opt(opt_name, **kw)
     sopt = get_server_opt(server)
+    flat = False
+    if engine == "flat" and opt_name == "delta_sgd":
+        # pallas kernels on TPU; identical fused math via XLA elsewhere
+        # (interpret-mode pallas in the round loop would distort timing)
+        flat = "pallas" if jax.default_backend() == "tpu" else "xla"
     rnd = jax.jit(make_fl_round(loss_fn, copt, sopt, num_rounds=rounds,
-                                weighted=weighted))
+                                weighted=weighted, flat=flat))
     state = init_fl_state(init_fn(jax.random.key(seed)), sopt)
     K = fed.epoch_steps(batch) * local_epochs
     t0 = time.time()
@@ -89,7 +98,7 @@ def run_fl(opt_name: str, task_id: str, *, alpha: float = 0.1,
     acc = float(accuracy(logits_fn(state.params, jnp.asarray(xt)),
                          jnp.asarray(yt)))
     return {"acc": acc, "wall_s": wall, "us_per_round": wall / rounds * 1e6,
-            "eta": float(metrics.get("eta_mean", 0.0)),
+            "eta": float(metrics.get("eta_mean", np.nan)),
             "loss": float(metrics.get("loss", np.nan))}
 
 

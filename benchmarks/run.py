@@ -18,6 +18,7 @@ Full protocol details: benchmarks/fl_common.py. Run everything:
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -121,7 +122,8 @@ def convex(rounds=40):
     emit("convex/dist_ratio_T40", (time.time() - t0) / rounds * 1e6, v / v0)
 
 
-def kernels():
+def kernels(rounds=None):
+    del rounds
     import jax
     import jax.numpy as jnp
     from repro.kernels.delta_sgd import delta_sgd as dk, ref as dref
@@ -145,6 +147,83 @@ def kernels():
     err = abs(float(out[0]) - float(dref.norms_ref(g, gp)[0]))
     emit("kernels/delta_sgd_norms_64k", us, err)
 
+    # ---- flat fused Δ-SGD step: packed (C, N) engine vs per-leaf path ----
+    # 16-leaf tree, 64k elements total; one full local step (norms+apply).
+    from repro.core import flat as fp
+    from repro.core.delta_sgd import (delta_sgd_init, delta_sgd_update,
+                                      flat_delta_sgd_init,
+                                      flat_delta_sgd_step)
+    GAMMA, DELTA, ETA0, THETA0 = 2.0, 0.1, 0.2, 1.0
+    tree = {f"w{i}": jnp.asarray(rng.normal(size=(4096,)), jnp.float32)
+            for i in range(16)}
+    grads = {k_: v * 0.1 for k_, v in tree.items()}
+    gprev = {k_: v * -0.05 for k_, v in tree.items()}
+    layout = fp.layout_of(tree)
+
+    def perleaf_step(p, g, gp_):
+        """Legacy schedule: norms + apply kernel per leaf (2×leaves
+        launches per local step, per client)."""
+        dg2 = gg2 = jnp.zeros((), jnp.float32)
+        for a, b in zip(jax.tree_util.tree_leaves(g),
+                        jax.tree_util.tree_leaves(gp_)):
+            x, y = dk.norms(a, b, interpret=True)
+            dg2, gg2 = dg2 + x, gg2 + y
+        eta = ETA0  # first-step branch: η fixed, apply still runs
+        return {k2: dk.apply_update(p[k2], g[k2], eta, interpret=True)
+                for k2 in p}, dg2, gg2
+
+    def packed_step(P, G, S):
+        return flat_delta_sgd_step(P, G, S, gamma=GAMMA, delta=DELTA,
+                                   eta0=ETA0, interpret=True)
+
+    P1 = fp.pack(tree, layout)[None]
+    G1 = fp.pack(grads, layout)[None]
+    S1 = flat_delta_sgd_init(1, layout, eta0=ETA0, theta0=THETA0)
+    S1 = S1._replace(prev_grads=fp.pack(gprev, layout)[None])
+
+    # launch accounting (trace-time): the packed step must cost exactly
+    # 2 pallas launches independent of leaf count and client count
+    for C in (1, 4):
+        Pc = jnp.broadcast_to(P1[0], (C, layout.padded_size))
+        Gc = jnp.broadcast_to(G1[0], (C, layout.padded_size))
+        Sc = flat_delta_sgd_init(C, layout, eta0=ETA0, theta0=THETA0)
+        dk.reset_launch_count()
+        jax.block_until_ready(packed_step(Pc, Gc, Sc)[0])
+        assert dk.launch_count() == 2, (C, dict(dk.LAUNCHES))
+    dk.reset_launch_count()
+    jax.block_until_ready(perleaf_step(tree, grads, gprev)[0]["w0"])
+    perleaf_launches = dk.launch_count()  # 2 × leaves, per client
+    print(f"# launches/local-step: per-leaf={perleaf_launches} "
+          f"(x num_clients under vmap), flat_fused=2 (total)", flush=True)
+
+    # parity vs the pytree oracle over a full first step
+    s_ref = delta_sgd_init(tree, eta0=ETA0, theta0=THETA0)
+    s_ref = s_ref._replace(prev_grads=gprev)
+    ref_p, ref_s = delta_sgd_update(tree, grads, s_ref, gamma=GAMMA,
+                                    delta=DELTA, eta0=ETA0)
+    newP, newS = packed_step(P1, G1, S1)
+    got_p = fp.unpack(newP[0], layout)
+    err = max(float(jnp.max(jnp.abs(got_p[k2] - ref_p[k2])))
+              for k2 in ref_p)
+    err = max(err, abs(float(newS.eta[0]) - float(ref_s.eta)))
+
+    us_packed, _ = timeit(lambda a, b: packed_step(a, b, S1), P1, G1)
+    us_perleaf, _ = timeit(lambda a, b: perleaf_step(a, b, gprev),
+                           tree, grads)
+    emit("kernels/delta_sgd_perleaf_64k", us_perleaf, 0.0)
+    emit("kernels/delta_sgd_flat_fused", us_packed, err)
+    assert us_packed <= us_perleaf, (us_packed, us_perleaf)
+
+    # end-to-end round time, flat vs vmap engine (derived = accuracy)
+    from benchmarks import fl_common
+    for eng in ("vmap", "flat"):
+        # fresh dataset per engine: round sampling is stateful, so a
+        # shared cached dataset would feed the engines different batches
+        fl_common._fed.cache_clear()
+        r = fl_common.run_fl("delta_sgd", "easy", rounds=10,
+                             num_clients=30, engine=eng)
+        emit(f"kernels/fl_round_{eng}", r["us_per_round"], r["acc"])
+
     q = jnp.asarray(rng.normal(size=(1, 256, 4, 64)), jnp.float32)
     k = jnp.asarray(rng.normal(size=(1, 256, 2, 64)), jnp.float32)
     v = jnp.asarray(rng.normal(size=(1, 256, 2, 64)), jnp.float32)
@@ -164,29 +243,43 @@ def kernels():
 
 
 ALL = {"table1": table1, "table2b": table2b, "table3": table3,
-       "table4": table4, "fig4": fig4, "fig5": fig5}
+       "table4": table4, "fig4": fig4, "fig5": fig5,
+       # convex keeps its own T=40 protocol; kernels ignores rounds
+       "convex": lambda rounds: convex(),
+       "kernels": kernels}
+
+
+def _write_csv(path: str = "bench_results.csv") -> None:
+    """Atomic write: never leave a truncated csv behind."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write("name,us_per_call,derived\n")
+        if ROWS:
+            f.write("\n".join(ROWS) + "\n")
+    os.replace(tmp, path)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--rounds", type=int, default=None)
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated exact suite names: "
+                         + ",".join(ALL))
     args = ap.parse_args()
     rounds = args.rounds or (25 if args.quick else 60)
     only = args.only.split(",") if args.only else None
+    if only:
+        unknown = [n for n in only if n not in ALL]
+        if unknown:
+            ap.error(f"unknown suite(s) {unknown}; choose from "
+                     f"{list(ALL)}")
     print("name,us_per_call,derived")
     for name, fn in ALL.items():
-        if only and name not in only:
+        if only is not None and name not in only:
             continue
         fn(rounds)
-    if only is None or "convex" in only:
-        convex()
-    if only is None or "kernels" in only:
-        kernels()
-    with open("bench_results.csv", "w") as f:
-        f.write("name,us_per_call,derived\n")
-        f.write("\n".join(ROWS) + "\n")
+    _write_csv()
 
 
 if __name__ == "__main__":

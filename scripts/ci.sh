@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Lightweight CI: tier-1 tests + kernels benchmark smoke (parity +
+# launch-count assertions live inside the kernels suite).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+python -m pytest -q
+python -m benchmarks.run --only kernels --quick

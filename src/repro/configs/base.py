@@ -191,6 +191,9 @@ class FLConfig:
     lr: float = 0.01
     momentum: float = 0.9
     weighted_agg: bool = False
+    # flat-parameter Δ-SGD engine: pack the param pytree + client axis
+    # into one (C, N) buffer for the whole local scan (core/fed_round)
+    flat_engine: bool = False
 
     @property
     def clients_per_round(self) -> int:

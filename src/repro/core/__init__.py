@@ -1,13 +1,17 @@
 """The paper's primary contribution: Δ-SGD client-adaptive federated
 optimization, plus every optimizer/loss it is compared against."""
+from repro.core import flat
 from repro.core.client_opt import CLIENT_OPTS, ClientOpt, get_client_opt
-from repro.core.delta_sgd import (DeltaSGDState, delta_sgd_init,
-                                  delta_sgd_reset, delta_sgd_update)
+from repro.core.delta_sgd import (DeltaSGDState, FlatDeltaSGDState,
+                                  delta_sgd_init, delta_sgd_reset,
+                                  delta_sgd_update, flat_delta_sgd_init,
+                                  flat_delta_sgd_step)
 from repro.core.fed_round import FLState, init_fl_state, make_fl_round
 from repro.core.losses import make_loss
 from repro.core.server_opt import SERVER_OPTS, ServerOpt, get_server_opt
 
 __all__ = ["CLIENT_OPTS", "ClientOpt", "get_client_opt", "DeltaSGDState",
-           "delta_sgd_init", "delta_sgd_reset", "delta_sgd_update",
+           "FlatDeltaSGDState", "delta_sgd_init", "delta_sgd_reset",
+           "delta_sgd_update", "flat_delta_sgd_init", "flat_delta_sgd_step",
            "FLState", "init_fl_state", "make_fl_round", "make_loss",
-           "SERVER_OPTS", "ServerOpt", "get_server_opt"]
+           "SERVER_OPTS", "ServerOpt", "get_server_opt", "flat"]

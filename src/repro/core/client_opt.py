@@ -29,6 +29,9 @@ class ClientOpt(NamedTuple):
     init: Callable[[Any], Any]
     reset: Callable[[Any, jax.Array], Any]
     update: Callable[[Any, Any, Any, jax.Array], tuple]
+    hyper: Any = None   # optimizer hyperparams (dict) for engines that
+    #                     re-express the rule outside update(), e.g. the
+    #                     flat-parameter Δ-SGD engine in fed_round
 
 
 def _decay_scale(round_frac):
@@ -148,7 +151,9 @@ def _delta_sgd(name, *, gamma, delta, eta0, theta0, groupwise=False,
                                 delta=delta, eta0=eta0,
                                 use_pallas=use_pallas)
 
-    return ClientOpt(name, init, reset, update)
+    hyper = dict(gamma=gamma, delta=delta, eta0=eta0, theta0=theta0,
+                 groupwise=groupwise)
+    return ClientOpt(name, init, reset, update, hyper)
 
 
 def get_client_opt(name: str, fl_cfg=None, **overrides) -> ClientOpt:

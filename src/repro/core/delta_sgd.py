@@ -19,13 +19,23 @@ Implementation notes:
 
 The fused Pallas kernel (repro/kernels/delta_sgd) performs the update +
 both norm accumulations in a single HBM pass; ``use_pallas`` switches it in.
+
+Flat engine: ``FlatDeltaSGDState`` + ``flat_delta_sgd_step`` run the SAME
+rule for all C participating clients at once on packed ``(C, N)`` buffers
+(repro.core.flat) — two kernel launches per local step total, independent
+of leaf count and client count. ``backend="pallas"`` uses the batched
+Pallas kernels (interpret mode off-TPU); ``backend="xla"`` lowers the
+identical math through plain jnp on the flat buffers, which is what
+meshed/pjit callers use.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import flat as flatlib
 
 
 class DeltaSGDState(NamedTuple):
@@ -90,8 +100,9 @@ def delta_sgd_update(params, grads, state: DeltaSGDState, *, gamma: float,
     first = (state.k == 0)
 
     if groupwise:
-        dg = {k: _global_norm(jax.tree.map(lambda a, b: a - b, grads[k],
-                                           state.prev_grads[k]))
+        dg = {k: _global_norm(jax.tree.map(
+                lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                grads[k], state.prev_grads[k]))
               for k in params}
         gn = _group_norms(grads)
         new_eta, new_theta = {}, {}
@@ -115,8 +126,10 @@ def delta_sgd_update(params, grads, state: DeltaSGDState, *, gamma: float,
 
     # ‖x_k − x_{k-1}‖ = η_{k-1}·‖g_{k-1}‖ for SGD updates
     dx_norm = state.eta * state.prev_grad_norm
-    dg_norm = _global_norm(jax.tree.map(lambda a, b: a - b, grads,
-                                        state.prev_grads))
+    # difference in f32 (exact for bf16 inputs) — matches the kernel paths
+    dg_norm = _global_norm(jax.tree.map(
+        lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+        grads, state.prev_grads))
     eta, theta = _eta_rule(state.eta, state.theta, dx_norm, dg_norm,
                            gamma, delta)
     eta = jnp.where(first, jnp.asarray(eta0, jnp.float32), eta)
@@ -128,3 +141,64 @@ def delta_sgd_update(params, grads, state: DeltaSGDState, *, gamma: float,
         params, grads)
     return new_params, DeltaSGDState(grads, eta, theta, grad_norm,
                                      state.k + 1)
+
+
+# --------------------------------------------------------------------------
+# flat engine: all C clients' Δ-SGD state on packed (C, N) buffers
+# --------------------------------------------------------------------------
+
+class FlatDeltaSGDState(NamedTuple):
+    prev_grads: jax.Array       # (C, N) packed previous gradients, f32
+    eta: jax.Array              # (C,) per-client step size
+    theta: jax.Array            # (C,) η_k / η_{k-1}
+    prev_grad_norm: jax.Array   # (C,)
+    k: jax.Array                # local step counter (shared, resets/round)
+
+
+def flat_delta_sgd_init(num_clients: int, layout: flatlib.FlatLayout, *,
+                        eta0: float, theta0: float) -> FlatDeltaSGDState:
+    C, N = num_clients, layout.padded_size
+    return FlatDeltaSGDState(
+        jnp.zeros((C, N), jnp.float32),
+        jnp.full((C,), eta0, jnp.float32),
+        jnp.full((C,), theta0, jnp.float32),
+        jnp.zeros((C,), jnp.float32),
+        jnp.asarray(0, jnp.int32))
+
+
+def flat_delta_sgd_step(P: jax.Array, G: jax.Array,
+                        state: FlatDeltaSGDState, *, gamma: float,
+                        delta: float, eta0: float,
+                        mask: Optional[jax.Array] = None,
+                        backend: str = "pallas",
+                        interpret: Optional[bool] = None):
+    """One Δ-SGD local step for ALL clients on packed buffers.
+
+    P, G: (C, N) packed params/grads. Exactly two Pallas launches
+    (batched_norms + batched_apply) regardless of leaf count and client
+    count; ``backend="xla"`` runs the same math as fused jnp ops for
+    meshed callers. Returns (new_P, new_state).
+    """
+    first = (state.k == 0)
+    if backend == "pallas":
+        from repro.kernels.delta_sgd import delta_sgd as k
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        dg2, gg2 = k.batched_norms(G, state.prev_grads,
+                                   interpret=interpret)
+    else:
+        from repro.kernels.delta_sgd import ref as kref
+        dg2, gg2 = kref.batched_norms_ref(G, state.prev_grads)
+    dg_norm = jnp.sqrt(dg2)
+    grad_norm = jnp.sqrt(gg2)
+    dx_norm = state.eta * state.prev_grad_norm
+    eta, theta = _eta_rule(state.eta, state.theta, dx_norm, dg_norm,
+                           gamma, delta)
+    eta = jnp.where(first, jnp.asarray(eta0, jnp.float32), eta)
+    theta = jnp.where(first, state.theta, theta)
+    if backend == "pallas":
+        new_P = k.batched_apply(P, G, eta, mask=mask, interpret=interpret)
+    else:
+        new_P = kref.batched_apply_ref(P, G, eta, mask)
+    return new_P, FlatDeltaSGDState(G, eta, theta, grad_norm,
+                                    state.k + 1)

@@ -11,6 +11,17 @@ Communication pattern, expressed jax-natively:
 
 Batch layout: every leaf of ``client_batches`` is (C, K, ...) — K per-step
 micro-batches of the client's *local* data.
+
+Flat engine (``flat=`` argument, Δ-SGD only): instead of vmapping the
+optimizer over C, the param pytree is packed ONCE at round start into a
+lane-aligned flat buffer broadcast to (C, N) (repro.core.flat), the
+K-step scan runs entirely on flat buffers — per step: one vmapped grad
+eval on the unpacked view, then exactly two fused kernel launches
+(batched norms + batched apply) for all leaves and all clients —
+aggregation is a single mean over the packed C axis, and the result is
+unpacked once at round end. ``flat="pallas"``/``True`` uses the batched
+Pallas kernels, ``flat="xla"`` the same math as fused jnp ops (for
+meshed/pjit callers).
 """
 from __future__ import annotations
 
@@ -19,8 +30,10 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import flat as flatlib
 from repro.core.client_opt import ClientOpt
-from repro.core.delta_sgd import DeltaSGDState
+from repro.core.delta_sgd import (DeltaSGDState, flat_delta_sgd_init,
+                                  flat_delta_sgd_step)
 from repro.core.server_opt import ServerOpt
 
 
@@ -35,14 +48,40 @@ def init_fl_state(params, server_opt: ServerOpt) -> FLState:
                    jnp.asarray(0, jnp.int32))
 
 
+def _finish_round(state: FLState, agg, losses, etas,
+                  server_opt: ServerOpt):
+    """Shared round tail for both engines: server update + metrics.
+
+    ``losses`` is (C, K); ``etas`` is (C,) with NaN for clients whose
+    optimizer has no scalar step-size state (non-Δ-SGD, groupwise)."""
+    params, sstate = server_opt.update(state.params, agg,
+                                       state.server_state)
+    metrics = {"loss": jnp.mean(losses),
+               "loss_last_step": jnp.mean(losses[:, -1]),
+               "eta_mean": jnp.mean(etas),
+               "eta_min": jnp.min(etas),
+               "eta_max": jnp.max(etas)}
+    return FLState(params, sstate, state.round + 1), metrics
+
+
 def make_fl_round(loss_fn, client_opt: ClientOpt, server_opt: ServerOpt, *,
-                  num_rounds: int, weighted: bool = False):
+                  num_rounds: int, weighted: bool = False,
+                  flat=False):
     """loss_fn(params, batch, global_params, prev_params)->(loss, metrics).
 
     Returns round_fn(state, client_batches, client_weights=None,
                      prev_local_params=None) -> (state, metrics).
+
+    ``flat``: False (vmap engine), True/"pallas", or "xla" — the packed
+    flat-buffer Δ-SGD engine (requires client_opt "delta_sgd", global
+    rule).
     """
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    if flat:
+        return _make_flat_round(grad_fn, client_opt, server_opt,
+                                num_rounds=num_rounds, weighted=weighted,
+                                backend="xla" if flat == "xla" else "pallas")
 
     def one_client(global_params, round_frac, batch_c, prev_c):
         ostate = client_opt.reset(client_opt.init(global_params), round_frac)
@@ -57,7 +96,8 @@ def make_fl_round(loss_fn, client_opt: ClientOpt, server_opt: ServerOpt, *,
         (p, os), losses = jax.lax.scan(step, (global_params, ostate),
                                        batch_c, unroll=scan_unroll())
         eta = (os.eta if isinstance(os, DeltaSGDState)
-               and not isinstance(os.eta, dict) else jnp.asarray(0.0))
+               and not isinstance(os.eta, dict)
+               else jnp.asarray(jnp.nan, jnp.float32))
         return p, losses, eta
 
     def round_fn(state: FLState, client_batches, client_weights=None,
@@ -82,10 +122,73 @@ def make_fl_round(loss_fn, client_opt: ClientOpt, server_opt: ServerOpt, *,
                 lambda x: jnp.mean(x.astype(jnp.float32), axis=0
                                    ).astype(x.dtype), new_locals)
 
-        params, sstate = server_opt.update(gp, agg, state.server_state)
-        metrics = {"loss": jnp.mean(losses),
-                   "loss_last_step": jnp.mean(losses[:, -1]),
-                   "eta_mean": jnp.mean(etas)}
-        return FLState(params, sstate, state.round + 1), metrics, new_locals
+        new_state, metrics = _finish_round(state, agg, losses, etas,
+                                           server_opt)
+        return new_state, metrics, new_locals
+
+    return round_fn
+
+
+def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
+                     *, num_rounds: int, weighted: bool, backend: str):
+    """Flat-parameter Δ-SGD engine: one packed (C, N) buffer carries every
+    leaf of every client's params through the K-step scan; two fused
+    kernel launches per local step total."""
+    hyper = client_opt.hyper
+    if (client_opt.name != "delta_sgd" or hyper is None
+            or hyper.get("groupwise")):
+        raise ValueError("flat engine requires the global-rule delta_sgd "
+                         f"client optimizer, got {client_opt.name!r}")
+    gamma, delta = hyper["gamma"], hyper["delta"]
+    eta0, theta0 = hyper["eta0"], hyper["theta0"]
+
+    def round_fn(state: FLState, client_batches, client_weights=None,
+                 prev_local_params=None):
+        """-> (new_state, metrics, new_local_params (C, ...))."""
+        gp = state.params
+        layout = flatlib.layout_of(gp)
+        mask = flatlib.round_mask(layout)
+        C = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
+
+        # pack once at round start; clients all start from the global params
+        P = jnp.broadcast_to(flatlib.pack(gp, layout)[None],
+                             (C, layout.padded_size))
+        S = flat_delta_sgd_init(C, layout, eta0=eta0, theta0=theta0)
+
+        # scan over local steps: batches (C, K, ...) -> (K, C, ...)
+        batches_t = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1),
+                                 client_batches)
+
+        def step(carry, batch_k):
+            P, S = carry
+            params_c = flatlib.unpack_batched(P, layout)
+            (l, _), g = jax.vmap(
+                grad_fn, in_axes=(0, 0, None,
+                                  0 if prev_local_params is not None
+                                  else None)
+            )(params_c, batch_k, gp, prev_local_params)
+            G = flatlib.pack_batched(g, layout)
+            P, S = flat_delta_sgd_step(P, G, S, gamma=gamma, delta=delta,
+                                       eta0=eta0, mask=mask,
+                                       backend=backend)
+            return (P, S), l
+
+        from repro.models.common import scan_unroll
+        (P, S), losses = jax.lax.scan(step, (P, S), batches_t,
+                                      unroll=scan_unroll())
+        losses = losses.T  # (K, C) -> (C, K), same layout as vmap engine
+
+        # aggregate: single (weighted) mean over the packed client axis
+        if weighted and client_weights is not None:
+            w = client_weights / jnp.sum(client_weights)
+            agg_flat = jnp.tensordot(w.astype(jnp.float32), P, axes=(0, 0))
+        else:
+            agg_flat = jnp.mean(P, axis=0)
+        agg = flatlib.unpack(agg_flat, layout)
+
+        new_state, metrics = _finish_round(state, agg, losses, S.eta,
+                                           server_opt)
+        new_locals = flatlib.unpack_batched(P, layout)
+        return new_state, metrics, new_locals
 
     return round_fn

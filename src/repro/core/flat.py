@@ -1,0 +1,131 @@
+"""FlatParams: pack a param/grad pytree into ONE lane-aligned flat buffer.
+
+The Δ-SGD local step is two global reductions plus an axpy (Eq. (4),
+Alg. 1) — work that is bandwidth-bound and identical for every leaf and
+every client. Launching it per leaf (and vmapping per client) pays
+kernel-launch and padding overhead proportional to ``num_leaves ×
+num_clients``. ``FlatLayout`` collapses both axes: the pytree becomes a
+single ``(N,)`` f32 buffer (``N`` padded so the Pallas kernels never
+re-pad), and the client axis becomes the leading dim of a dense ``(C, N)``
+buffer that one 2-D-grid kernel sweeps in a single launch.
+
+Layout is computed once per (treedef, shapes, dtypes) and cached; packing
+is one concatenate, unpacking is slice + reshape + cast views. Tail
+padding is zero-filled so global norm reductions over the padded buffer
+are exact.
+
+Mixed precision: the buffer is always f32. Leaves whose dtype is narrower
+(bf16) are tracked by ``round_mask`` — a per-element mask the fused apply
+kernel uses to reproduce the reference path's per-step
+``(p32 − η·g32).astype(bf16)`` rounding bit-for-bit, so a flat K-step
+scan matches the per-leaf pytree path.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LANES = 128          # TPU lane width; every buffer is a (M, LANES) grid
+BLOCK_ROWS = 1024    # kernel row-block; kernels/delta_sgd imports these
+
+
+class LeafSpec(NamedTuple):
+    offset: int                # element offset into the flat buffer
+    size: int                  # number of valid elements
+    shape: Tuple[int, ...]     # original leaf shape (per client)
+    dtype: Any                 # original leaf dtype
+
+
+class FlatLayout(NamedTuple):
+    treedef: Any
+    leaves: Tuple[LeafSpec, ...]
+    size: int                  # total valid elements
+    padded_size: int           # N: multiple of rows*LANES, kernel-ready
+
+
+_LAYOUT_CACHE: dict = {}
+
+
+def _padded(total: int) -> int:
+    """Round ``total`` up so (M, LANES) splits evenly into row blocks."""
+    m0 = max(1, -(-total // LANES))
+    rows = min(BLOCK_ROWS, m0)
+    m = -(-m0 // rows) * rows
+    return m * LANES
+
+
+def layout_of(tree, *, batched: bool = False) -> FlatLayout:
+    """Flat layout for ``tree`` (cached). With ``batched=True`` the leaves
+    carry a leading client axis which is excluded from the layout."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = tuple(tuple(l.shape[1:] if batched else l.shape)
+                   for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+    key = (treedef, shapes, dtypes)
+    hit = _LAYOUT_CACHE.get(key)
+    if hit is not None:
+        return hit
+    specs, off = [], 0
+    for shape, dtype in zip(shapes, dtypes):
+        if dtype not in (jnp.dtype(jnp.float32), jnp.dtype(jnp.bfloat16)):
+            raise TypeError(f"FlatLayout supports f32/bf16 leaves, got "
+                            f"{dtype}")
+        size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        specs.append(LeafSpec(off, size, shape, dtype))
+        off += size
+    layout = FlatLayout(treedef, tuple(specs), off, _padded(off))
+    _LAYOUT_CACHE[key] = layout
+    return layout
+
+
+def round_mask(layout: FlatLayout) -> Optional[jax.Array]:
+    """(N,) f32 mask, 1.0 where the element belongs to a sub-f32 leaf and
+    must be rounded to that dtype after every update; None if all-f32."""
+    if all(s.dtype == jnp.dtype(jnp.float32) for s in layout.leaves):
+        return None
+    m = np.zeros((layout.padded_size,), np.float32)
+    for s in layout.leaves:
+        if s.dtype != jnp.dtype(jnp.float32):
+            m[s.offset:s.offset + s.size] = 1.0
+    return jnp.asarray(m)
+
+
+def pack(tree, layout: Optional[FlatLayout] = None) -> jax.Array:
+    """Pytree -> (N,) f32 buffer (zero tail padding). One concatenate."""
+    layout = layout or layout_of(tree)
+    leaves = jax.tree_util.tree_leaves(tree)
+    parts = [l.reshape(-1).astype(jnp.float32) for l in leaves]
+    pad = layout.padded_size - layout.size
+    if pad:
+        parts.append(jnp.zeros((pad,), jnp.float32))
+    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+
+def unpack(buf: jax.Array, layout: FlatLayout):
+    """(N,) buffer -> pytree with original shapes/dtypes (slice views)."""
+    leaves = [buf[s.offset:s.offset + s.size].reshape(s.shape)
+              .astype(s.dtype) for s in layout.leaves]
+    return jax.tree_util.tree_unflatten(layout.treedef, leaves)
+
+
+def pack_batched(tree, layout: Optional[FlatLayout] = None) -> jax.Array:
+    """Pytree with leading client axis C on every leaf -> (C, N) f32."""
+    layout = layout or layout_of(tree, batched=True)
+    leaves = jax.tree_util.tree_leaves(tree)
+    C = leaves[0].shape[0]
+    parts = [l.reshape(C, -1).astype(jnp.float32) for l in leaves]
+    pad = layout.padded_size - layout.size
+    if pad:
+        parts.append(jnp.zeros((C, pad), jnp.float32))
+    return jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+
+
+def unpack_batched(buf: jax.Array, layout: FlatLayout):
+    """(C, N) buffer -> pytree with (C, *shape) leaves, original dtypes."""
+    C = buf.shape[0]
+    leaves = [buf[:, s.offset:s.offset + s.size].reshape((C,) + s.shape)
+              .astype(s.dtype) for s in layout.leaves]
+    return jax.tree_util.tree_unflatten(layout.treedef, leaves)

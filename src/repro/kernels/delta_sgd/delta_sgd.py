@@ -3,28 +3,181 @@
 The paper's step size needs two global reductions per local step
 (‖g_k − g_{k−1}‖², ‖g_k‖² — the ‖Δx‖ term reuses the previous ‖g‖ since
 Δx = −η·g for SGD updates). The reductions must complete before η is known,
-so the update itself is a second pass. Kernel pair:
+so the update itself is a second pass.
 
-  delta_sgd_norms  — ONE HBM pass over (g, g_prev) producing BOTH partial
-                     sums per block, accumulated across the sequential TPU
-                     grid into a (1,1) output. bf16-in / f32-accumulate.
-  delta_sgd_apply  — p ← p − η·g, tiled through VMEM; the caller donates
-                     p so the update is in-place, and g is carried forward
-                     as the next g_prev without a copy.
+Flat packed layout (the fast path — see ``repro.core.flat``): the whole
+param pytree is ONE lane-aligned f32 buffer and the client axis is the
+leading dim of a dense ``(C, N)`` buffer, ``N = M·128`` with ``M`` an
+exact multiple of the row-block. The kernel pair runs a 2-D grid over
+(client, row-block):
 
-vs. the naive 3-pass schedule (norm Δg, norm g, update + state copy) this
-is the HBM-bandwidth floor for the rule: read {g, g_prev} once, read {p, g}
-once, write {p} once.
+  batched_norms  — ONE HBM pass over (G, G_prev) producing BOTH partial
+                   sums per block, accumulated across the sequential
+                   row-block grid axis into per-client (C, 1, 1) outputs.
+                   No vmap, no per-leaf loop: the client axis is a grid
+                   dimension, so the kernel is vmap-free by construction.
+  batched_apply  — P ← P − η_c·G with per-client η, tiled through VMEM;
+                   P is aliased to the output so the update is in-place.
+                   An optional per-element round mask reproduces the
+                   reference path's per-step bf16 rounding for sub-f32
+                   leaves packed into the f32 buffer.
+
+Launch-count math, per local step over a ``num_leaves``-leaf tree and
+``C`` clients: the per-leaf path costs ``num_leaves × C × 2`` pallas
+launches (norms + apply per leaf per client, under vmap) plus a
+``_pad_2d`` concatenate copy per call; the packed path costs exactly
+**2** launches — one ``batched_norms``, one ``batched_apply`` — for any
+leaf count and any client count, with zero per-call padding (the layout
+pre-pads once at pack time). Both paths read {G, G_prev} once and
+read {P, G}/write {P} once, i.e. the HBM-bandwidth floor for the rule;
+the packed path is the one that reaches it at small-leaf granularity.
+
+The single-tensor ``norms`` / ``apply_update`` kernels below are the
+legacy per-leaf path, kept as the benchmark baseline and for callers
+that operate on individual tensors.
 """
 from __future__ import annotations
+
+from collections import Counter
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-BLOCK_ROWS = 1024
-LANES = 128
+# single source of truth for the tile geometry: the packer pads layouts
+# to exactly these block sizes, so both modules must agree
+from repro.core.flat import BLOCK_ROWS, LANES
 
+# trace-time launch accounting: incremented once per pallas_call *built*,
+# i.e. launches per traced step (what the compiled program will execute).
+LAUNCHES: Counter = Counter()
+
+
+def reset_launch_count() -> None:
+    LAUNCHES.clear()
+
+
+def launch_count() -> int:
+    return sum(LAUNCHES.values())
+
+
+# --------------------------------------------------------------------------
+# packed (C, N) kernels — one launch per op for all leaves and all clients
+# --------------------------------------------------------------------------
+
+def _batched_norms_kernel(g_ref, gp_ref, dg_ref, gg_ref):
+    j = pl.program_id(1)  # row-block axis: sequential, innermost
+    g = g_ref[...].astype(jnp.float32)
+    gp = gp_ref[...].astype(jnp.float32)
+    d = g - gp
+
+    @pl.when(j == 0)
+    def _init():
+        dg_ref[0, 0, 0] = 0.0
+        gg_ref[0, 0, 0] = 0.0
+
+    dg_ref[0, 0, 0] += jnp.sum(d * d)
+    gg_ref[0, 0, 0] += jnp.sum(g * g)
+
+
+def _batched_apply_kernel(eta_ref, p_ref, g_ref, out_ref):
+    eta = eta_ref[0, 0, 0]
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    out_ref[...] = (p - eta * g).astype(out_ref.dtype)
+
+
+def _batched_apply_masked_kernel(eta_ref, p_ref, g_ref, mask_ref, out_ref):
+    eta = eta_ref[0, 0, 0]
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    r = p - eta * g
+    # mask=1 elements belong to bf16 leaves: round exactly like the
+    # per-leaf reference's astype(bf16) so flat K-step scans stay on par
+    rounded = r.astype(jnp.bfloat16).astype(jnp.float32)
+    out_ref[...] = jnp.where(mask_ref[...] > 0.0, rounded, r)
+
+
+def _grid_shapes(n: int):
+    """(M, rows, blocks) for a lane-aligned flat length n (no re-padding:
+    FlatLayout guarantees M % rows == 0)."""
+    assert n % LANES == 0, f"flat length {n} not lane-aligned"
+    m = n // LANES
+    rows = min(BLOCK_ROWS, m)
+    assert m % rows == 0, f"flat length {n} not row-block aligned"
+    return m, rows, m // rows
+
+
+def batched_norms(g: jax.Array, g_prev: jax.Array, *,
+                  interpret: bool = False):
+    """Per-client (sum((g-gp)^2), sum(g^2)) over packed (C, N) buffers.
+
+    ONE pallas launch for all clients and all (packed) leaves; returns a
+    pair of (C,) f32 vectors.
+    """
+    C, n = g.shape
+    m, rows, blocks = _grid_shapes(n)
+    g3 = g.reshape(C, m, LANES)
+    gp3 = g_prev.reshape(C, m, LANES)
+    LAUNCHES["batched_norms"] += 1
+    dg, gg = pl.pallas_call(
+        _batched_norms_kernel,
+        grid=(C, blocks),
+        in_specs=[pl.BlockSpec((1, rows, LANES), lambda c, j: (c, j, 0)),
+                  pl.BlockSpec((1, rows, LANES), lambda c, j: (c, j, 0))],
+        out_specs=[pl.BlockSpec((1, 1, 1), lambda c, j: (c, 0, 0)),
+                   pl.BlockSpec((1, 1, 1), lambda c, j: (c, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((C, 1, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((C, 1, 1), jnp.float32)],
+        interpret=interpret,
+    )(g3, gp3)
+    return dg[:, 0, 0], gg[:, 0, 0]
+
+
+def batched_apply(p: jax.Array, g: jax.Array, eta: jax.Array, *,
+                  mask: jax.Array | None = None,
+                  interpret: bool = False) -> jax.Array:
+    """P ← P − η_c·G on packed (C, N) buffers with per-client η (C,).
+
+    ONE pallas launch; P is donated to the output (in-place on TPU).
+    ``mask`` is the optional (N,) round mask from FlatLayout.round_mask.
+    """
+    C, n = p.shape
+    m, rows, blocks = _grid_shapes(n)
+    p3 = p.reshape(C, m, LANES)
+    g3 = g.reshape(C, m, LANES)
+    eta3 = eta.astype(jnp.float32).reshape(C, 1, 1)
+    LAUNCHES["batched_apply"] += 1
+    common = dict(
+        grid=(C, blocks),
+        out_specs=pl.BlockSpec((1, rows, LANES), lambda c, j: (c, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, m, LANES), p.dtype),
+        interpret=interpret,
+    )
+    eta_spec = pl.BlockSpec((1, 1, 1), lambda c, j: (c, 0, 0))
+    buf_spec = pl.BlockSpec((1, rows, LANES), lambda c, j: (c, j, 0))
+    if mask is None:
+        out = pl.pallas_call(
+            _batched_apply_kernel,
+            in_specs=[eta_spec, buf_spec, buf_spec],
+            input_output_aliases={1: 0},
+            **common,
+        )(eta3, p3, g3)
+    else:
+        mask2 = mask.reshape(m, LANES)
+        mask_spec = pl.BlockSpec((rows, LANES), lambda c, j: (j, 0))
+        out = pl.pallas_call(
+            _batched_apply_masked_kernel,
+            in_specs=[eta_spec, buf_spec, buf_spec, mask_spec],
+            input_output_aliases={1: 0},
+            **common,
+        )(eta3, p3, g3, mask2)
+    return out.reshape(C, n)
+
+
+# --------------------------------------------------------------------------
+# legacy per-leaf kernels (benchmark baseline / single-tensor callers)
+# --------------------------------------------------------------------------
 
 def _norms_kernel(g_ref, gp_ref, dg_ref, gg_ref):
     i = pl.program_id(0)
@@ -72,6 +225,7 @@ def norms(g: jax.Array, g_prev: jax.Array, *, interpret: bool = False):
         extra = grid * rows - m
         g2 = jnp.pad(g2, ((0, extra), (0, 0)))
         gp2 = jnp.pad(gp2, ((0, extra), (0, 0)))
+    LAUNCHES["norms_leaf"] += 1
     dg, gg = pl.pallas_call(
         _norms_kernel,
         grid=(grid,),
@@ -99,6 +253,7 @@ def apply_update(p: jax.Array, g: jax.Array, eta, *,
         p2 = jnp.pad(p2, ((0, extra), (0, 0)))
         g2 = jnp.pad(g2, ((0, extra), (0, 0)))
     eta_arr = jnp.asarray(eta, jnp.float32).reshape(1, 1)
+    LAUNCHES["apply_leaf"] += 1
     out = pl.pallas_call(
         _apply_kernel,
         grid=(grid,),

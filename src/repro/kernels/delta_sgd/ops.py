@@ -1,49 +1,32 @@
-"""jit'd wrapper: full Δ-SGD local step over a param pytree using the
-Pallas kernels (falls back to interpret mode off-TPU)."""
+"""Kernel-backed Δ-SGD local step over a param pytree.
+
+The pytree is packed into one lane-aligned flat buffer (repro.core.flat)
+and the step delegates to the batched flat engine with C = 1 — two
+pallas launches total, replacing the old per-leaf Python loops
+(``num_leaves × 2`` launches plus a pad-concatenate copy per call).
+Falls back to interpret mode off-TPU.
+"""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from repro.kernels.delta_sgd import delta_sgd as k
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-def tree_norms(grads, prev_grads):
-    """Global ‖g − g_prev‖ and ‖g‖ via the one-pass dual-reduction kernel."""
-    dg2 = jnp.zeros((), jnp.float32)
-    gg2 = jnp.zeros((), jnp.float32)
-    for g, gp in zip(jax.tree_util.tree_leaves(grads),
-                     jax.tree_util.tree_leaves(prev_grads)):
-        a, b = k.norms(g, gp, interpret=_interpret())
-        dg2 += a
-        gg2 += b
-    return jnp.sqrt(dg2), jnp.sqrt(gg2)
-
-
-def tree_apply(params, grads, eta):
-    leaves_p, tdef = jax.tree_util.tree_flatten(params)
-    leaves_g = jax.tree_util.tree_leaves(grads)
-    out = [k.apply_update(p, g, eta, interpret=_interpret())
-           for p, g in zip(leaves_p, leaves_g)]
-    return jax.tree_util.tree_unflatten(tdef, out)
+from repro.core import flat as flatlib
 
 
 def fused_delta_sgd_update(params, grads, state, *, gamma: float,
                            delta: float, eta0: float):
     """Drop-in replacement for core.delta_sgd.delta_sgd_update (global
-    variant): kernel-backed norms + update."""
-    from repro.core.delta_sgd import DeltaSGDState, _eta_rule
-    first = (state.k == 0)
-    dg_norm, grad_norm = tree_norms(grads, state.prev_grads)
-    dx_norm = state.eta * state.prev_grad_norm
-    eta, theta = _eta_rule(state.eta, state.theta, dx_norm, dg_norm,
-                           gamma, delta)
-    eta = jnp.where(first, jnp.asarray(eta0, jnp.float32), eta)
-    theta = jnp.where(first, state.theta, theta)
-    new_params = tree_apply(params, grads, eta)
-    return new_params, DeltaSGDState(grads, eta, theta, grad_norm,
-                                     state.k + 1)
+    variant): the flat engine's step on (1, N) packed buffers."""
+    from repro.core.delta_sgd import (DeltaSGDState, FlatDeltaSGDState,
+                                      flat_delta_sgd_step)
+    layout = flatlib.layout_of(params)
+    mask = flatlib.round_mask(layout)
+    P = flatlib.pack(params, layout)[None]            # (1, N)
+    G = flatlib.pack(grads, layout)[None]
+    fstate = FlatDeltaSGDState(
+        flatlib.pack(state.prev_grads, layout)[None],
+        state.eta[None], state.theta[None],
+        state.prev_grad_norm[None], state.k)
+    P, fstate = flat_delta_sgd_step(P, G, fstate, gamma=gamma, delta=delta,
+                                    eta0=eta0, mask=mask)
+    new_params = flatlib.unpack(P[0], layout)
+    return new_params, DeltaSGDState(grads, fstate.eta[0], fstate.theta[0],
+                                     fstate.prev_grad_norm[0], fstate.k)

@@ -18,3 +18,22 @@ def norms_ref(g: jnp.ndarray, g_prev: jnp.ndarray):
 def apply_ref(p: jnp.ndarray, g: jnp.ndarray, eta) -> jnp.ndarray:
     return (p.astype(jnp.float32)
             - eta * g.astype(jnp.float32)).astype(p.dtype)
+
+
+def batched_norms_ref(g: jnp.ndarray, g_prev: jnp.ndarray):
+    """Per-client sums over packed (C, N) buffers -> pair of (C,)."""
+    g32 = g.astype(jnp.float32)
+    gp32 = g_prev.astype(jnp.float32)
+    return (jnp.sum(jnp.square(g32 - gp32), axis=1),
+            jnp.sum(jnp.square(g32), axis=1))
+
+
+def batched_apply_ref(p: jnp.ndarray, g: jnp.ndarray, eta: jnp.ndarray,
+                      mask=None) -> jnp.ndarray:
+    """P − η_c·G on (C, N) with per-client η (C,); optional bf16 rounding
+    on mask=1 elements."""
+    r = p.astype(jnp.float32) - eta[:, None] * g.astype(jnp.float32)
+    if mask is None:
+        return r.astype(p.dtype)
+    rounded = r.astype(jnp.bfloat16).astype(jnp.float32)
+    return jnp.where(mask[None, :] > 0.0, rounded, r).astype(p.dtype)

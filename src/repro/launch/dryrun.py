@@ -122,7 +122,8 @@ def analytic_memory(cfg, shape, spec, mesh, pstruct, param_sh, fl,
 
 def _compile_step(cfg, shape, mesh, spec, fl, *, unroll, remat,
                   use_pallas=False, seq_shard=False, quant_kv=False,
-                  softmax_bf16=False, cache_seq_shard=False):
+                  softmax_bf16=False, cache_seq_shard=False,
+                  flat_fed=None):
     """Lower + compile one program variant. Returns (compiled, t_lower,
     t_compile, analytic)."""
     import repro.models.attention as _att
@@ -136,7 +137,7 @@ def _compile_step(cfg, shape, mesh, spec, fl, *, unroll, remat,
     with mesh, unroll_scans(unroll), logical_rules(rules):
         if shape.kind == "train":
             step, sopt = make_train_step(model, fl, use_pallas=use_pallas,
-                                         remat=remat)
+                                         remat=remat, flat=flat_fed)
             state_struct = abstract_fl_state(model, sopt)
             batch = train_specs(model, shape, fl, spec.clients_on(mesh))
             param_sh = make_param_shardings(spec, mesh, state_struct.params)

@@ -15,6 +15,8 @@ Variants:
   softmax_bf16 bf16 softmax-weight storage between the attention matmuls
   quant_kv     int8 KV cache entries + f16 scales (decode shapes)
   capacity1    MoE capacity factor 1.25 -> 1.0
+  flat_fed     flat-parameter Δ-SGD engine (train shapes): client params
+               packed into one (C, N) buffer for the whole local scan
 """
 import argparse
 import json
@@ -40,6 +42,9 @@ VARIANT_KNOBS = {
     "capacity1": {"capacity": 1.0},
     "expert_2d": {"expert_2d": True},
     "expert_2d+capacity1": {"expert_2d": True, "capacity": 1.0},
+    # flat-parameter Δ-SGD engine: packed (C, N) client-state buffer,
+    # 2 fused update ops per local step instead of per-leaf/per-client
+    "flat_fed": {"flat_fed": True},
 }
 
 

@@ -14,10 +14,24 @@ from repro.models.model import Model
 
 
 def make_train_step(model: Model, fl: FLConfig, *, num_rounds: int = 1000,
-                    use_pallas: bool = False, remat: bool = False):
-    """One federated round over the (C, K, b, ...) batch layout."""
+                    use_pallas: bool = False, remat: bool = False,
+                    flat: Optional[bool] = None):
+    """One federated round over the (C, K, b, ...) batch layout.
+
+    ``flat`` switches in the flat-parameter Δ-SGD engine (defaults to
+    ``fl.flat_engine``); under meshes the kernels lower through XLA unless
+    ``use_pallas`` is also set.
+    """
     copt = get_client_opt(fl.client_opt, fl, use_pallas=use_pallas)
     sopt = get_server_opt(fl.server_opt)
+    if flat is None:
+        flat = fl.flat_engine
+    flat_mode = False
+    if flat:
+        if fl.client_opt != "delta_sgd":
+            raise ValueError("flat engine requires client_opt='delta_sgd', "
+                             f"got {fl.client_opt!r}")
+        flat_mode = "pallas" if use_pallas else "xla"
 
     def base_loss(params, batch):
         from repro.models.common import remat_blocks
@@ -26,7 +40,7 @@ def make_train_step(model: Model, fl: FLConfig, *, num_rounds: int = 1000,
 
     loss_fn = make_loss(base_loss, fedprox_mu=fl.fedprox_mu)
     round_fn = make_fl_round(loss_fn, copt, sopt, num_rounds=num_rounds,
-                             weighted=fl.weighted_agg)
+                             weighted=fl.weighted_agg, flat=flat_mode)
 
     def train_step(state, client_batches):
         new_state, metrics, _ = round_fn(state, client_batches)

@@ -1,0 +1,117 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The tier-1 suite property-tests with a tiny slice of the hypothesis API:
+``@settings(max_examples=N, deadline=None)``, ``@given(...)`` and the
+``floats`` / ``integers`` / ``lists`` strategies. This module implements
+exactly that slice with deterministic seeded sampling so the suite
+collects and runs without the extra dependency; when the real package is
+available, ``conftest.py`` never installs this fallback.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+__version__ = "0.0-fallback"
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+def floats(min_value, max_value, *, allow_nan=False, allow_infinity=False):
+    del allow_nan, allow_infinity  # bounded draws are always finite
+    lo, hi = float(min_value), float(max_value)
+
+    def draw(rng):
+        # hit the boundaries occasionally, like hypothesis does
+        r = rng.random()
+        if r < 0.05:
+            return lo
+        if r < 0.1:
+            return hi
+        return float(rng.uniform(lo, hi))
+
+    return _Strategy(draw)
+
+
+def integers(min_value, max_value):
+    lo, hi = int(min_value), int(max_value)
+
+    def draw(rng):
+        r = rng.random()
+        if r < 0.05:
+            return lo
+        if r < 0.1:
+            return hi
+        return int(rng.integers(lo, hi + 1))
+
+    return _Strategy(draw)
+
+
+def lists(elements, *, min_size=0, max_size=10):
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.example(rng) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+class strategies:
+    floats = staticmethod(floats)
+    integers = staticmethod(integers)
+    lists = staticmethod(lists)
+
+
+def given(*arg_strategies, **kw_strategies):
+    def decorate(fn):
+        sig = inspect.signature(fn)
+        # hypothesis binds positional strategies to the RIGHTMOST
+        # parameters (leading ones may be pytest fixtures)
+        names = [p for p in sig.parameters if p not in kw_strategies]
+        names = names[len(names) - len(arg_strategies):] \
+            if arg_strategies else []
+        pos = dict(zip(names, arg_strategies))
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        DEFAULT_MAX_EXAMPLES)
+            # crc32, not hash(): str hashing is salted per process and
+            # would make failures unreproducible across runs
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = {k: s.example(rng) for k, s in pos.items()}
+                drawn.update({k: s.example(rng)
+                              for k, s in kw_strategies.items()})
+                fn(*args, **drawn, **kwargs)
+
+        # hide the drawn parameters from pytest's fixture resolution
+        drawn_names = set(pos) | set(kw_strategies)
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for p in sig.parameters.values()
+                        if p.name not in drawn_names])
+        del wrapper.__wrapped__
+        wrapper.hypothesis_fallback = True
+        return wrapper
+
+    return decorate
+
+
+def settings(*, max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    del deadline
+
+    def decorate(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return decorate

@@ -1,8 +1,19 @@
 import os
+import sys
 
 # Smoke tests and benches run on the real single CPU device. Only
 # launch/dryrun.py installs the 512 placeholder devices (its own first line).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    # Property tests degrade to deterministic seeded sampling so the suite
+    # collects and passes without the optional dependency.
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_fallback
+    sys.modules["hypothesis"] = _hypothesis_fallback
+    sys.modules["hypothesis.strategies"] = _hypothesis_fallback.strategies
 
 import numpy as np
 import pytest

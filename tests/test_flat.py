@@ -1,0 +1,274 @@
+"""Flat-parameter Δ-SGD engine: packer round-trips, batched kernel
+parity, and full multi-round equivalence against the per-leaf pytree
+oracle (core.delta_sgd.delta_sgd_update) in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flat as fp
+from repro.core.delta_sgd import (delta_sgd_init, delta_sgd_reset,
+                                  delta_sgd_update, flat_delta_sgd_init,
+                                  flat_delta_sgd_step)
+from repro.kernels.delta_sgd import delta_sgd as dk
+from repro.kernels.delta_sgd import ref as dref
+
+GAMMA, DELTA, ETA0, THETA0 = 2.0, 0.1, 0.2, 1.0
+
+
+def _mixed_tree(rng, scale=1.0):
+    """bf16 params / f32 params mixed in one tree (odd, non-lane shapes)."""
+    return {"emb": jnp.asarray(rng.normal(size=(33, 7)) * scale,
+                               jnp.bfloat16),
+            "w": jnp.asarray(rng.normal(size=(129,)) * scale, jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(5, 3, 2)) * scale,
+                             jnp.float32)}
+
+
+# ------------------------------------------------------------------ packer
+def test_pack_unpack_roundtrip_mixed_dtypes(rng):
+    tree = _mixed_tree(rng)
+    layout = fp.layout_of(tree)
+    buf = fp.pack(tree, layout)
+    assert buf.shape == (layout.padded_size,)
+    assert layout.padded_size % fp.LANES == 0
+    # tail padding is zero (exact global reductions over the buffer)
+    assert float(jnp.sum(jnp.abs(buf[layout.size:]))) == 0.0
+    back = fp.unpack(buf, layout)
+    for k in tree:
+        assert back[k].dtype == tree[k].dtype
+        np.testing.assert_array_equal(np.asarray(back[k], np.float32),
+                                      np.asarray(tree[k], np.float32))
+
+
+def test_pack_unpack_batched_roundtrip(rng):
+    C = 4
+    tree = {"a": jnp.asarray(rng.normal(size=(C, 17, 3)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(C, 40)), jnp.bfloat16)}
+    layout = fp.layout_of(tree, batched=True)
+    buf = fp.pack_batched(tree, layout)
+    assert buf.shape == (C, layout.padded_size)
+    back = fp.unpack_batched(buf, layout)
+    for k in tree:
+        assert back[k].shape == tree[k].shape
+        assert back[k].dtype == tree[k].dtype
+        np.testing.assert_array_equal(np.asarray(back[k], np.float32),
+                                      np.asarray(tree[k], np.float32))
+
+
+def test_layout_cached_per_treedef(rng):
+    t1 = _mixed_tree(rng)
+    t2 = _mixed_tree(rng, scale=3.0)
+    assert fp.layout_of(t1) is fp.layout_of(t2)
+
+
+def test_round_mask_marks_bf16_segments(rng):
+    tree = _mixed_tree(rng)
+    layout = fp.layout_of(tree)
+    mask = fp.round_mask(layout)
+    assert mask is not None
+    n_bf16 = sum(s.size for s in layout.leaves
+                 if s.dtype == jnp.dtype(jnp.bfloat16))
+    assert float(jnp.sum(mask)) == n_bf16
+    f32_tree = {"x": jnp.zeros((7,), jnp.float32)}
+    assert fp.round_mask(fp.layout_of(f32_tree)) is None
+
+
+# ---------------------------------------------------------- batched kernels
+@pytest.mark.parametrize("C,n_leaves", [(1, 1), (3, 5), (8, 2)])
+def test_batched_norms_matches_ref(C, n_leaves, rng):
+    tree = {f"w{i}": jnp.asarray(rng.normal(size=(C, 50 + 13 * i)),
+                                 jnp.float32) for i in range(n_leaves)}
+    layout = fp.layout_of(tree, batched=True)
+    g = fp.pack_batched(tree, layout)
+    gp = g * -0.3 + 0.1
+    dg, gg = dk.batched_norms(g, gp, interpret=True)
+    dg_r, gg_r = dref.batched_norms_ref(g, gp)
+    np.testing.assert_allclose(dg, dg_r, rtol=1e-5)
+    np.testing.assert_allclose(gg, gg_r, rtol=1e-5)
+
+
+def test_batched_apply_per_client_eta_and_mask(rng):
+    C = 3
+    tree = {"a": jnp.asarray(rng.normal(size=(C, 200)), jnp.bfloat16),
+            "b": jnp.asarray(rng.normal(size=(C, 77)), jnp.float32)}
+    layout = fp.layout_of(tree, batched=True)
+    p = fp.pack_batched(tree, layout)
+    g = p * 0.2 + 0.05
+    eta = jnp.asarray([0.1, 0.5, 1.3], jnp.float32)
+    mask = fp.round_mask(layout)
+    out = dk.batched_apply(p, g, eta, mask=mask, interpret=True)
+    ref = dref.batched_apply_ref(p, g, eta, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+    # masked segments are exactly bf16-representable
+    seg = fp.unpack_batched(out, layout)["a"]
+    np.testing.assert_array_equal(
+        np.asarray(out[:, :200].astype(jnp.bfloat16), np.float32),
+        np.asarray(seg, np.float32))
+
+
+# -------------------------------------------------- full-round parity oracle
+def test_flat_step_matches_oracle_multi_round_mixed_dtype(rng):
+    """Satellite acceptance: fused flat path == delta_sgd_update oracle
+    (interpret mode) over TWO full K=3 rounds — covers the k=0 reset
+    branch — on a mixed bf16/f32 tree, tolerance ≤ 1e-5."""
+    C, K, R = 3, 3, 2
+    tree = _mixed_tree(rng)
+    layout = fp.layout_of(tree)
+    mask = fp.round_mask(layout)
+    N = layout.padded_size
+
+    # per-step per-client synthetic grads in the leaf dtypes
+    grad_seq = [[jax.tree.map(
+        lambda p: jnp.asarray(rng.normal(size=p.shape), p.dtype), tree)
+        for _ in range(K)] for _ in range(C)]
+
+    # oracle: per-client pytree loop with round-start resets
+    ref_params, ref_etas = [], []
+    for c in range(C):
+        p = tree
+        s = delta_sgd_init(p, eta0=ETA0, theta0=THETA0)
+        for r in range(R):
+            s = delta_sgd_reset(s, eta0=ETA0, theta0=THETA0)
+            for k in range(K):
+                p, s = delta_sgd_update(p, grad_seq[c][k], s, gamma=GAMMA,
+                                        delta=DELTA, eta0=ETA0)
+        ref_params.append(p)
+        ref_etas.append(float(s.eta))
+
+    # flat engine: one (C, N) buffer, two launches per step
+    P = jnp.stack([fp.pack(tree, layout)] * C)
+    for r in range(R):
+        S = flat_delta_sgd_init(C, layout, eta0=ETA0, theta0=THETA0)
+        for k in range(K):
+            G = jnp.stack([fp.pack(grad_seq[c][k], layout)
+                           for c in range(C)])
+            P, S = flat_delta_sgd_step(P, G, S, gamma=GAMMA, delta=DELTA,
+                                       eta0=ETA0, mask=mask,
+                                       backend="pallas", interpret=True)
+
+    got = fp.unpack_batched(P, layout)
+    for c in range(C):
+        for key in tree:
+            np.testing.assert_allclose(
+                np.asarray(got[key][c], np.float32),
+                np.asarray(ref_params[c][key], np.float32),
+                rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(float(S.eta[c]), ref_etas[c], rtol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["pallas", "xla"])
+def test_flat_round_engine_matches_vmap_engine(backend, rng):
+    """make_fl_round(flat=...) == the vmapped per-client engine."""
+    from repro.core import (get_client_opt, get_server_opt, init_fl_state,
+                            make_fl_round, make_loss)
+    D, C, K = 5, 3, 4
+
+    def quad(params, batch):
+        r = batch["A"] @ params["x"] - batch["b"]
+        return 0.5 * jnp.mean(r * r), {}
+
+    batches = {"A": jnp.asarray(rng.normal(size=(C, K, 8, D)), jnp.float32),
+               "b": jnp.asarray(rng.normal(size=(C, K, 8)), jnp.float32)}
+    x0 = jnp.asarray(rng.normal(size=D), jnp.float32)
+    copt = get_client_opt("delta_sgd")
+    sopt = get_server_opt("fedavg")
+    loss = make_loss(quad)
+    results = {}
+    for eng in (False, backend):
+        rnd = jax.jit(make_fl_round(loss, copt, sopt, num_rounds=10,
+                                    flat=eng))
+        st = init_fl_state({"x": x0}, sopt)
+        for _ in range(2):
+            st, m, loc = rnd(st, batches)
+        results[eng] = (np.asarray(st.params["x"]), float(m["eta_mean"]),
+                        float(m["loss"]), np.asarray(loc["x"]))
+    for a, b in zip(results[False], results[backend]):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_flat_round_weighted_matches_vmap(rng):
+    from repro.core import (get_client_opt, get_server_opt, init_fl_state,
+                            make_fl_round, make_loss)
+    D, C, K = 4, 3, 2
+
+    def quad(params, batch):
+        r = batch["A"] @ params["x"] - batch["b"]
+        return 0.5 * jnp.mean(r * r), {}
+
+    batches = {"A": jnp.asarray(rng.normal(size=(C, K, 8, D)), jnp.float32),
+               "b": jnp.asarray(rng.normal(size=(C, K, 8)), jnp.float32)}
+    w = jnp.asarray([0.7, 0.2, 0.1], jnp.float32)
+    copt = get_client_opt("delta_sgd")
+    sopt = get_server_opt("fedavg")
+    loss = make_loss(quad)
+    out = {}
+    for eng in (False, "xla"):
+        rnd = jax.jit(make_fl_round(loss, copt, sopt, num_rounds=10,
+                                    weighted=True, flat=eng))
+        st = init_fl_state({"x": jnp.zeros((D,), jnp.float32)}, sopt)
+        st, _, _ = rnd(st, batches, client_weights=w)
+        out[eng] = np.asarray(st.params["x"])
+    np.testing.assert_allclose(out["xla"], out[False], rtol=1e-5)
+
+
+def test_flat_round_two_launches_per_local_step(rng):
+    """Launch-count acceptance: the scan body is traced once, so tracing
+    one flat round builds exactly 2 pallas calls — i.e. every local step
+    executes 2 launches — independent of leaf count, client count, and
+    K."""
+    from repro.core import (get_client_opt, get_server_opt, init_fl_state,
+                            make_fl_round, make_loss)
+
+    def quad(params, batch):
+        r = batch["A"] @ params["x"] + batch["A"] @ params["y"] - batch["b"]
+        return 0.5 * jnp.mean(r * r), {}
+
+    copt = get_client_opt("delta_sgd")
+    sopt = get_server_opt("fedavg")
+    loss = make_loss(quad)
+    for C, K, D in ((2, 3, 4), (5, 2, 6)):
+        batches = {"A": jnp.asarray(rng.normal(size=(C, K, 8, D)),
+                                    jnp.float32),
+                   "b": jnp.asarray(rng.normal(size=(C, K, 8)),
+                                    jnp.float32)}
+        rnd = make_fl_round(loss, copt, sopt, num_rounds=10, flat="pallas")
+        st = init_fl_state({"x": jnp.zeros((D,), jnp.float32),
+                            "y": jnp.zeros((D,), jnp.float32)}, sopt)
+        dk.reset_launch_count()
+        jax.eval_shape(lambda s, b: rnd(s, b), st, batches)
+        assert dk.launch_count() == 2, (C, K, dict(dk.LAUNCHES))
+
+
+def test_flat_engine_rejects_non_delta_sgd():
+    from repro.core import get_client_opt, get_server_opt, make_fl_round
+    with pytest.raises(ValueError):
+        make_fl_round(lambda *a: (0.0, {}), get_client_opt("sgd"),
+                      get_server_opt("fedavg"), num_rounds=1, flat=True)
+
+
+def test_eta_metrics_nan_for_non_delta_and_finite_for_delta(rng):
+    from repro.core import (get_client_opt, get_server_opt, init_fl_state,
+                            make_fl_round, make_loss)
+    D, C, K = 4, 2, 2
+
+    def quad(params, batch):
+        r = batch["A"] @ params["x"] - batch["b"]
+        return 0.5 * jnp.mean(r * r), {}
+
+    batches = {"A": jnp.asarray(rng.normal(size=(C, K, 8, D)), jnp.float32),
+               "b": jnp.asarray(rng.normal(size=(C, K, 8)), jnp.float32)}
+    sopt = get_server_opt("fedavg")
+    loss = make_loss(quad)
+    for opt, finite in (("sgd", False), ("delta_sgd", True)):
+        rnd = jax.jit(make_fl_round(loss, get_client_opt(opt, lr=0.05),
+                                    sopt, num_rounds=10))
+        st = init_fl_state({"x": jnp.zeros((D,), jnp.float32)}, sopt)
+        _, m, _ = rnd(st, batches)
+        for key in ("eta_mean", "eta_min", "eta_max"):
+            assert key in m
+            assert np.isfinite(float(m[key])) == finite, (opt, key)
+        if finite:
+            assert float(m["eta_min"]) <= float(m["eta_mean"]) \
+                <= float(m["eta_max"])
