@@ -1,0 +1,100 @@
+"""CI benchmark-regression guard.
+
+Compares ``bench_results.csv`` rows against a committed baseline JSON
+(``benchmarks/baseline.json``). For every baseline entry the row must
+
+  * exist in the csv,
+  * keep its ``derived`` column (kernel max |err| vs the oracle) at or
+    below ``max_err``,
+  * not regress its cost by more than ``max_regression`` (e.g. 1.25 =
+    +25%). When the entry names a ``normalize_by`` row, cost is the
+    RATIO us(row) / us(normalize_by) from the SAME run — runner speed
+    cancels out, so the guard is meaningful across CI machines; the raw
+    us_per_call is only reported.
+
+Modes: ``hard`` exits 1 on any violation (pinned-jax CI leg), ``soft``
+prints violations but exits 0 (latest-jax leg), ``off`` skips entirely.
+
+  python -m benchmarks.compare bench_results.csv benchmarks/baseline.json \
+      --mode hard
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def read_results(path: str):
+    rows = {}
+    with open(path) as f:
+        header = f.readline()
+        if not header.startswith("name,"):
+            raise SystemExit(f"{path}: not a bench_results csv")
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            name, us, derived = line.split(",")
+            rows[name] = (float(us), float(derived))
+    return rows
+
+
+def check(results: dict, baseline: dict):
+    """-> (violations, report_lines)."""
+    violations, report = [], []
+    for name, spec in baseline.items():
+        if name not in results:
+            violations.append(f"{name}: row missing from results")
+            continue
+        us, derived = results[name]
+        max_err = spec.get("max_err")
+        if max_err is not None and derived > max_err:
+            violations.append(f"{name}: derived {derived:g} > "
+                              f"max_err {max_err:g}")
+        norm = spec.get("normalize_by")
+        if norm is not None:
+            if norm not in results:
+                violations.append(f"{name}: normalize_by row {norm!r} "
+                                  f"missing from results")
+                continue
+            cost, base = us / results[norm][0], spec["ratio"]
+            kind = f"ratio vs {norm}"
+        else:
+            cost, base = us, spec["us_per_call"]
+            kind = "us_per_call"
+        limit = base * spec.get("max_regression", 1.25)
+        line = (f"{name}: {kind} {cost:.4g} (baseline {base:.4g}, "
+                f"limit {limit:.4g}, raw {us:.0f}us)")
+        report.append(line)
+        if cost > limit:
+            violations.append(f"{name}: {kind} {cost:.4g} regressed past "
+                              f"{limit:.4g} (baseline {base:.4g})")
+    return violations, report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("results")
+    ap.add_argument("baseline")
+    ap.add_argument("--mode", choices=["hard", "soft", "off"],
+                    default="hard")
+    args = ap.parse_args()
+    if args.mode == "off":
+        print("bench guard: off")
+        return
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    violations, report = check(read_results(args.results), baseline)
+    for line in report:
+        print("bench guard:", line)
+    for v in violations:
+        print("bench guard VIOLATION:", v)
+    if violations and args.mode == "hard":
+        sys.exit(1)
+    print(f"bench guard: {'soft-' if violations else ''}ok "
+          f"({len(report)} rows checked, mode={args.mode})")
+
+
+if __name__ == "__main__":
+    main()

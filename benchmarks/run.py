@@ -11,6 +11,8 @@ derived = final test accuracy unless stated).
   convex   : Thm 5 numeric check (derived = final distance² / initial)
   kernels  : per-kernel µs/call in interpret mode (derived = max |err| vs
              the ref oracle — correctness, not TPU wall time)
+  sharded  : flat Δ-SGD round on a host (data, model) mesh, sharded vs
+             replicated (derived = max |param diff| between engines)
 
 Full protocol details: benchmarks/fl_common.py. Run everything:
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only table1,...]
@@ -22,13 +24,20 @@ import os
 import sys
 import time
 
+# 8 virtual CPU devices so the `sharded` suite exercises a real mesh;
+# must be set before jax initializes (all jax imports here are lazy).
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
 import numpy as np
 
 ROWS = []
 
 
 def emit(name, us, derived):
-    row = f"{name},{us:.1f},{derived:.4f}"
+    # %.6g keeps small kernel parity errors exact (a fixed .4f would
+    # round 1.4e-4 down past the bench guard's max_err thresholds)
+    row = f"{name},{us:.1f},{derived:.6g}"
     ROWS.append(row)
     print(row, flush=True)
 
@@ -242,11 +251,62 @@ def kernels(rounds=None):
     emit("kernels/mamba2_ssd_128", us, err)
 
 
+def sharded(rounds=None):
+    """Flat Δ-SGD rounds with the (C, N) buffer mesh-sharded per
+    FederationSpec.flat_spec vs the replicated flat engine. Timing is
+    host-mesh wall time (virtual CPU devices — layout/collective
+    correctness, not TPU speed); derived of the sharded row = max
+    |param diff| vs the replicated engine after 3 rounds."""
+    del rounds
+    import jax
+    import jax.numpy as jnp
+    from repro.core import (get_client_opt, get_server_opt, init_fl_state,
+                            make_fl_round, make_loss)
+    from repro.sharding.spec import cross_device
+
+    rng = np.random.default_rng(0)
+    shape = (4, 2) if jax.device_count() >= 8 else (1, 1)
+    mesh = jax.make_mesh(shape, ("data", "model"))
+    spec = cross_device(mesh)
+    D, C, K = 4096, 8, 4
+
+    def quad(params, batch):
+        r = batch["A"] @ params["x"] - batch["b"]
+        return 0.5 * jnp.mean(r * r), {}
+
+    batches = {"A": jnp.asarray(rng.normal(size=(C, K, 8, D)), jnp.float32),
+               "b": jnp.asarray(rng.normal(size=(C, K, 8)), jnp.float32)}
+    params = {"x": jnp.asarray(rng.normal(size=D), jnp.float32)}
+    copt = get_client_opt("delta_sgd")
+    sopt = get_server_opt("fedavg")
+    loss = make_loss(quad)
+    finals = {}
+    for name, kw in (("replicated", {}),
+                     ("sharded", dict(mesh=mesh, federation=spec))):
+        rnd = jax.jit(make_fl_round(loss, copt, sopt, num_rounds=10,
+                                    flat="xla", **kw))
+        st = init_fl_state(params, sopt)
+        st, _, _ = rnd(st, batches)          # compile + warm
+        jax.block_until_ready(st.params["x"])
+        st = init_fl_state(params, sopt)
+        t0 = time.time()
+        for _ in range(3):
+            st, _, _ = rnd(st, batches)
+        jax.block_until_ready(st.params["x"])
+        us = (time.time() - t0) / 3 * 1e6
+        finals[name] = np.asarray(st.params["x"])
+        err = (0.0 if name == "replicated" else
+               float(np.max(np.abs(finals["sharded"]
+                                   - finals["replicated"]))))
+        emit(f"sharded/flat_round_{name}_{shape[0]}x{shape[1]}", us, err)
+
+
 ALL = {"table1": table1, "table2b": table2b, "table3": table3,
        "table4": table4, "fig4": fig4, "fig5": fig5,
-       # convex keeps its own T=40 protocol; kernels ignores rounds
+       # convex keeps its own T=40 protocol; kernels/sharded ignore rounds
        "convex": lambda rounds: convex(),
-       "kernels": kernels}
+       "kernels": kernels,
+       "sharded": sharded}
 
 
 def _write_csv(path: str = "bench_results.csv") -> None:

@@ -1,9 +1,18 @@
 #!/usr/bin/env bash
-# Lightweight CI: tier-1 tests + kernels benchmark smoke (parity +
-# launch-count assertions live inside the kernels suite).
+# CI: tier-1 tests (exact ROADMAP verify command) + kernels/sharded
+# benchmark smoke + benchmark-regression guard.
+#
+# BENCH_GUARD=hard|soft|off (default hard): the guard compares
+# bench_results.csv against benchmarks/baseline.json — soft on the
+# latest-jax CI leg, hard on pinned (see .github/workflows/ci.yml).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+# 8 virtual CPU devices so the sharded flat-engine tests exercise a real
+# (data, model) mesh (tests/test_flat.py needs8 cases + `sharded` bench)
+export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
 
-python -m pytest -q
-python -m benchmarks.run --only kernels --quick
+python -m pytest -x -q
+python -m benchmarks.run --only kernels,sharded --quick
+python -m benchmarks.compare bench_results.csv benchmarks/baseline.json \
+    --mode "${BENCH_GUARD:-hard}"

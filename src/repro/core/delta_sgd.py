@@ -27,6 +27,15 @@ of leaf count and client count. ``backend="pallas"`` uses the batched
 Pallas kernels (interpret mode off-TPU); ``backend="xla"`` lowers the
 identical math through plain jnp on the flat buffers, which is what
 meshed/pjit callers use.
+
+Sharded flat engine: ``flat_delta_sgd_step_sharded`` is the mesh-native
+variant — the (C, N) buffer stays sharded per
+``FederationSpec.flat_spec(mesh)`` (clients over the client axes, N over
+fsdp/tp axes) and the kernels run inside ``shard_map`` on each device's
+local slab. The dual norm reduction completes with ONE psum of the two
+partial sums over the N-shard axes (2·C_local floats on the wire); the
+(C, N) buffer itself is never gathered, and the apply is purely
+shard-local.
 """
 from __future__ import annotations
 
@@ -200,5 +209,96 @@ def flat_delta_sgd_step(P: jax.Array, G: jax.Array,
         new_P = k.batched_apply(P, G, eta, mask=mask, interpret=interpret)
     else:
         new_P = kref.batched_apply_ref(P, G, eta, mask)
+    return new_P, FlatDeltaSGDState(G, eta, theta, grad_norm,
+                                    state.k + 1)
+
+
+# --------------------------------------------------------------------------
+# sharded flat engine: the (C, N) buffer stays mesh-sharded end to end
+# --------------------------------------------------------------------------
+
+def _axis_names(entry):
+    """Flatten one PartitionSpec entry to a tuple of mesh axis names."""
+    if entry is None:
+        return ()
+    return tuple(entry) if isinstance(entry, tuple) else (entry,)
+
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """shard_map across jax versions (jax.shard_map >= 0.6, experimental
+    before), with replication checking off — the Pallas kernels carry no
+    replication rules."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    for kw in ({"check_rep": False}, {"check_vma": False}, {}):
+        try:
+            return sm(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)
+        except TypeError:
+            continue
+    raise RuntimeError("no compatible shard_map signature found")
+
+
+def flat_delta_sgd_step_sharded(P: jax.Array, G: jax.Array,
+                                state: FlatDeltaSGDState, *, gamma: float,
+                                delta: float, eta0: float, mesh, pspec,
+                                mask: Optional[jax.Array] = None,
+                                backend: str = "xla",
+                                interpret: Optional[bool] = None):
+    """One Δ-SGD local step on a mesh-sharded packed (C, N) buffer.
+
+    ``pspec`` is ``FederationSpec.flat_spec(mesh)`` — clients over
+    ``pspec[0]``, the flat param dim over ``pspec[1]`` (the layout must
+    have been built with ``shards=FederationSpec.flat_shards(mesh)`` so
+    each local slab stays lane/row-block aligned). Per device: the kernel
+    pair runs on the local (C_loc, N_loc) slab; the per-client dual norms
+    finish with a single psum over the N-shard axes, so η is exact while
+    N is never gathered. Returns (new_P, new_state) with unchanged
+    shardings.
+    """
+    from jax.sharding import PartitionSpec as PS
+    ca = pspec[0] if len(pspec) > 0 else None
+    na = pspec[1] if len(pspec) > 1 else None
+    na_names = _axis_names(na)
+    buf, vec, rep = PS(ca, na), PS(ca), PS()
+    if backend == "pallas" and interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    with_mask = mask is not None
+
+    def local_step(P_l, G_l, Gp_l, eta, theta, pgn, k_ctr, *rest):
+        mask_l = rest[0] if with_mask else None
+        if backend == "pallas":
+            from repro.kernels.delta_sgd import delta_sgd as k
+            dg2, gg2 = k.batched_norms(G_l, Gp_l, interpret=interpret)
+        else:
+            from repro.kernels.delta_sgd import ref as kref
+            dg2, gg2 = kref.batched_norms_ref(G_l, Gp_l)
+        if na_names:
+            dg2 = jax.lax.psum(dg2, na_names)
+            gg2 = jax.lax.psum(gg2, na_names)
+        dg_norm = jnp.sqrt(dg2)
+        grad_norm = jnp.sqrt(gg2)
+        dx_norm = eta * pgn
+        eta_n, theta_n = _eta_rule(eta, theta, dx_norm, dg_norm,
+                                   gamma, delta)
+        first = (k_ctr == 0)
+        eta_n = jnp.where(first, jnp.asarray(eta0, jnp.float32), eta_n)
+        theta_n = jnp.where(first, theta, theta_n)
+        if backend == "pallas":
+            new_P = k.batched_apply(P_l, G_l, eta_n, mask=mask_l,
+                                    interpret=interpret)
+        else:
+            new_P = kref.batched_apply_ref(P_l, G_l, eta_n, mask_l)
+        return new_P, eta_n, theta_n, grad_norm
+
+    ins = [P, G, state.prev_grads, state.eta, state.theta,
+           state.prev_grad_norm, state.k]
+    specs = [buf, buf, buf, vec, vec, vec, rep]
+    if with_mask:
+        ins.append(mask)
+        specs.append(PS(na))
+    fn = _shard_map(local_step, mesh, tuple(specs), (buf, vec, vec, vec))
+    new_P, eta, theta, grad_norm = fn(*ins)
     return new_P, FlatDeltaSGDState(G, eta, theta, grad_norm,
                                     state.k + 1)

@@ -22,6 +22,18 @@ aggregation is a single mean over the packed C axis, and the result is
 unpacked once at round end. ``flat="pallas"``/``True`` uses the batched
 Pallas kernels, ``flat="xla"`` the same math as fused jnp ops (for
 meshed/pjit callers).
+
+Sharded flat engine (``mesh=`` + ``federation=`` arguments): the packed
+(C, N) buffer is mesh-sharded end to end per
+``FederationSpec.flat_spec(mesh)`` — clients over the client axes, N over
+the fsdp/tp axes, with a per-shard padded layout
+(``layout_of(..., shards=...)``) so every device's slab stays
+lane-aligned. Pack/unpack run under ``with_sharding_constraint``, the
+per-step kernel pair runs inside ``shard_map`` with a psum dual-norm
+reduction (repro.core.delta_sgd.flat_delta_sgd_step_sharded), and the
+round-end aggregation is a sharded mean over the client axes. The caller
+must jit the returned round_fn (sharding constraints require a jit
+context).
 """
 from __future__ import annotations
 
@@ -33,7 +45,8 @@ import jax.numpy as jnp
 from repro.core import flat as flatlib
 from repro.core.client_opt import ClientOpt
 from repro.core.delta_sgd import (DeltaSGDState, flat_delta_sgd_init,
-                                  flat_delta_sgd_step)
+                                  flat_delta_sgd_step,
+                                  flat_delta_sgd_step_sharded)
 from repro.core.server_opt import ServerOpt
 
 
@@ -66,7 +79,7 @@ def _finish_round(state: FLState, agg, losses, etas,
 
 def make_fl_round(loss_fn, client_opt: ClientOpt, server_opt: ServerOpt, *,
                   num_rounds: int, weighted: bool = False,
-                  flat=False):
+                  flat=False, mesh=None, federation=None):
     """loss_fn(params, batch, global_params, prev_params)->(loss, metrics).
 
     Returns round_fn(state, client_batches, client_weights=None,
@@ -75,13 +88,24 @@ def make_fl_round(loss_fn, client_opt: ClientOpt, server_opt: ServerOpt, *,
     ``flat``: False (vmap engine), True/"pallas", or "xla" — the packed
     flat-buffer Δ-SGD engine (requires client_opt "delta_sgd", global
     rule).
+
+    ``mesh`` + ``federation`` (FederationSpec): flat engine only — keep
+    the packed (C, N) buffer sharded per ``federation.flat_spec(mesh)``
+    for the whole round (see module docstring). Both or neither.
     """
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    if (mesh is None) != (federation is None):
+        raise ValueError("mesh and federation must be given together")
+    if mesh is not None and not flat:
+        raise ValueError("mesh/federation sharding requires the flat "
+                         "engine (flat=...)")
 
     if flat:
         return _make_flat_round(grad_fn, client_opt, server_opt,
                                 num_rounds=num_rounds, weighted=weighted,
-                                backend="xla" if flat == "xla" else "pallas")
+                                backend="xla" if flat == "xla" else "pallas",
+                                mesh=mesh, federation=federation)
 
     def one_client(global_params, round_frac, batch_c, prev_c):
         ostate = client_opt.reset(client_opt.init(global_params), round_frac)
@@ -130,10 +154,13 @@ def make_fl_round(loss_fn, client_opt: ClientOpt, server_opt: ServerOpt, *,
 
 
 def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
-                     *, num_rounds: int, weighted: bool, backend: str):
+                     *, num_rounds: int, weighted: bool, backend: str,
+                     mesh=None, federation=None):
     """Flat-parameter Δ-SGD engine: one packed (C, N) buffer carries every
     leaf of every client's params through the K-step scan; two fused
-    kernel launches per local step total."""
+    kernel launches per local step total. With ``mesh``/``federation``
+    the buffer additionally stays sharded per ``federation.flat_spec``
+    for the whole round."""
     hyper = client_opt.hyper
     if (client_opt.name != "delta_sgd" or hyper is None
             or hyper.get("groupwise")):
@@ -142,18 +169,63 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
     gamma, delta = hyper["gamma"], hyper["delta"]
     eta0, theta0 = hyper["eta0"], hyper["theta0"]
 
+    sharded = mesh is not None
+    if sharded:
+        from jax.sharding import NamedSharding, PartitionSpec as PS
+        pspec = federation.flat_spec(mesh)          # (C, N) buffers
+        cspec = federation.flat_client_spec(mesh)   # (C,) vectors
+        nspec = PS(pspec[1])                        # (N,) buffers
+        shards = federation.flat_shards(mesh)
+
+        def constrain(x, ps):
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, ps))
+    else:
+        shards = 1
+
+        def constrain(x, ps):
+            return x
+
+        pspec = cspec = nspec = None
+
+    def flat_step(P, G, S, mask):
+        if sharded:
+            return flat_delta_sgd_step_sharded(
+                P, G, S, gamma=gamma, delta=delta, eta0=eta0, mesh=mesh,
+                pspec=pspec, mask=mask, backend=backend)
+        return flat_delta_sgd_step(P, G, S, gamma=gamma, delta=delta,
+                                   eta0=eta0, mask=mask, backend=backend)
+
     def round_fn(state: FLState, client_batches, client_weights=None,
                  prev_local_params=None):
         """-> (new_state, metrics, new_local_params (C, ...))."""
         gp = state.params
-        layout = flatlib.layout_of(gp)
+        layout = flatlib.layout_of(gp, shards=shards)
         mask = flatlib.round_mask(layout)
+        if mask is not None:
+            mask = constrain(mask, nspec)
         C = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
 
         # pack once at round start; clients all start from the global params
-        P = jnp.broadcast_to(flatlib.pack(gp, layout)[None],
-                             (C, layout.padded_size))
+        if sharded:
+            # broadcast leaves FIRST, then pack via the 2-D batched
+            # concatenate: constraining a 1-D packed concatenate trips an
+            # XLA CPU SPMD mis-partitioning (stride-shuffled buffer,
+            # jax<=0.4.37); the (C, N) axis-1 concatenate partitions
+            # correctly and is what the round materializes anyway.
+            bcast = jax.tree.map(
+                lambda l: jnp.broadcast_to(l[None], (C,) + l.shape), gp)
+            P = constrain(flatlib.pack_batched(bcast, layout), pspec)
+        else:
+            P = jnp.broadcast_to(flatlib.pack(gp, layout)[None],
+                                 (C, layout.padded_size))
         S = flat_delta_sgd_init(C, layout, eta0=eta0, theta0=theta0)
+        if sharded:
+            S = S._replace(prev_grads=constrain(S.prev_grads, pspec),
+                           eta=constrain(S.eta, cspec),
+                           theta=constrain(S.theta, cspec),
+                           prev_grad_norm=constrain(S.prev_grad_norm,
+                                                    cspec))
 
         # scan over local steps: batches (C, K, ...) -> (K, C, ...)
         batches_t = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1),
@@ -167,10 +239,8 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
                                   0 if prev_local_params is not None
                                   else None)
             )(params_c, batch_k, gp, prev_local_params)
-            G = flatlib.pack_batched(g, layout)
-            P, S = flat_delta_sgd_step(P, G, S, gamma=gamma, delta=delta,
-                                       eta0=eta0, mask=mask,
-                                       backend=backend)
+            G = constrain(flatlib.pack_batched(g, layout), pspec)
+            P, S = flat_step(P, G, S, mask)
             return (P, S), l
 
         from repro.models.common import scan_unroll
@@ -178,13 +248,16 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
                                       unroll=scan_unroll())
         losses = losses.T  # (K, C) -> (C, K), same layout as vmap engine
 
-        # aggregate: single (weighted) mean over the packed client axis
+        # aggregate: single (weighted) mean over the packed client axis —
+        # under the sharded engine XLA lowers this to the FedAvg
+        # all-reduce over the client mesh axes; the (N,) result keeps the
+        # flat-dim sharding.
         if weighted and client_weights is not None:
             w = client_weights / jnp.sum(client_weights)
             agg_flat = jnp.tensordot(w.astype(jnp.float32), P, axes=(0, 0))
         else:
             agg_flat = jnp.mean(P, axis=0)
-        agg = flatlib.unpack(agg_flat, layout)
+        agg = flatlib.unpack(constrain(agg_flat, nspec), layout)
 
         new_state, metrics = _finish_round(state, agg, losses, S.eta,
                                            server_opt)

@@ -19,6 +19,15 @@ Mixed precision: the buffer is always f32. Leaves whose dtype is narrower
 kernel uses to reproduce the reference path's per-step
 ``(p32 − η·g32).astype(bf16)`` rounding bit-for-bit, so a flat K-step
 scan matches the per-leaf pytree path.
+
+Sharded layouts: under an SPMD mesh the N dim of the (C, N) buffer is
+sharded over the fsdp/tp axes (``FederationSpec.flat_spec``). A layout
+built with ``shards=S`` pads N so that N/S is itself lane- and
+row-block-aligned — each device's contiguous slab is directly kernel-
+ready, no re-padding inside ``shard_map``. All padding still lives in the
+global tail (zero-filled), so global norm reductions stay exact. The
+layout cache key includes ``shards``: switching meshes in one process can
+never reuse a stale padded layout.
 """
 from __future__ import annotations
 
@@ -43,28 +52,36 @@ class FlatLayout(NamedTuple):
     treedef: Any
     leaves: Tuple[LeafSpec, ...]
     size: int                  # total valid elements
-    padded_size: int           # N: multiple of rows*LANES, kernel-ready
+    padded_size: int           # N: multiple of shards*rows*LANES
+    shards: int = 1            # N-dim shard count the padding aligns to
 
 
 _LAYOUT_CACHE: dict = {}
 
 
-def _padded(total: int) -> int:
-    """Round ``total`` up so (M, LANES) splits evenly into row blocks."""
-    m0 = max(1, -(-total // LANES))
+def _padded(total: int, shards: int = 1) -> int:
+    """Round ``total`` up so that each of ``shards`` equal contiguous
+    slabs splits evenly into (rows, LANES) row blocks."""
+    per = max(1, -(-total // shards))
+    m0 = max(1, -(-per // LANES))
     rows = min(BLOCK_ROWS, m0)
     m = -(-m0 // rows) * rows
-    return m * LANES
+    return m * LANES * shards
 
 
-def layout_of(tree, *, batched: bool = False) -> FlatLayout:
+def layout_of(tree, *, batched: bool = False, shards: int = 1) -> FlatLayout:
     """Flat layout for ``tree`` (cached). With ``batched=True`` the leaves
-    carry a leading client axis which is excluded from the layout."""
+    carry a leading client axis which is excluded from the layout.
+    ``shards`` is the N-dim shard count of the target mesh
+    (``FederationSpec.flat_shards``); it is part of the cache key, so two
+    meshes with different shard counts never share a padded layout."""
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     shapes = tuple(tuple(l.shape[1:] if batched else l.shape)
                    for l in leaves)
     dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
-    key = (treedef, shapes, dtypes)
+    key = (treedef, shapes, dtypes, int(shards))
     hit = _LAYOUT_CACHE.get(key)
     if hit is not None:
         return hit
@@ -76,7 +93,8 @@ def layout_of(tree, *, batched: bool = False) -> FlatLayout:
         size = int(np.prod(shape, dtype=np.int64)) if shape else 1
         specs.append(LeafSpec(off, size, shape, dtype))
         off += size
-    layout = FlatLayout(treedef, tuple(specs), off, _padded(off))
+    layout = FlatLayout(treedef, tuple(specs), off, _padded(off, shards),
+                        int(shards))
     _LAYOUT_CACHE[key] = layout
     return layout
 

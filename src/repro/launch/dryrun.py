@@ -123,9 +123,11 @@ def analytic_memory(cfg, shape, spec, mesh, pstruct, param_sh, fl,
 def _compile_step(cfg, shape, mesh, spec, fl, *, unroll, remat,
                   use_pallas=False, seq_shard=False, quant_kv=False,
                   softmax_bf16=False, cache_seq_shard=False,
-                  flat_fed=None):
+                  flat_fed=None, flat_sharded=False):
     """Lower + compile one program variant. Returns (compiled, t_lower,
-    t_compile, analytic)."""
+    t_compile, analytic). ``flat_sharded`` (flat_fed only) threads the
+    mesh + FederationSpec into the round so the packed (C, N) buffer
+    stays sharded per ``spec.flat_spec(mesh)``."""
     import repro.models.attention as _att
     from repro.models.common import logical_rules, unroll_scans
     _att.SOFTMAX_BF16 = softmax_bf16
@@ -136,8 +138,10 @@ def _compile_step(cfg, shape, mesh, spec, fl, *, unroll, remat,
     t0 = time.time()
     with mesh, unroll_scans(unroll), logical_rules(rules):
         if shape.kind == "train":
-            step, sopt = make_train_step(model, fl, use_pallas=use_pallas,
-                                         remat=remat, flat=flat_fed)
+            step, sopt = make_train_step(
+                model, fl, use_pallas=use_pallas, remat=remat, flat=flat_fed,
+                mesh=mesh if (flat_fed and flat_sharded) else None,
+                federation=spec if (flat_fed and flat_sharded) else None)
             state_struct = abstract_fl_state(model, sopt)
             batch = train_specs(model, shape, fl, spec.clients_on(mesh))
             param_sh = make_param_shardings(spec, mesh, state_struct.params)

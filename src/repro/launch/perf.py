@@ -17,6 +17,12 @@ Variants:
   capacity1    MoE capacity factor 1.25 -> 1.0
   flat_fed     flat-parameter Δ-SGD engine (train shapes): client params
                packed into one (C, N) buffer for the whole local scan
+  flat_fed_sharded
+               flat engine with the (C, N) buffer mesh-sharded per
+               FederationSpec.flat_spec (clients over client axes, N over
+               fsdp/tp axes); the compiled HLO is asserted to contain NO
+               rematerialization of the full (C, N) buffer
+               (repro.sharding.hlo.assert_flat_buffer_sharded)
 """
 import argparse
 import json
@@ -45,7 +51,31 @@ VARIANT_KNOBS = {
     # flat-parameter Δ-SGD engine: packed (C, N) client-state buffer,
     # 2 fused update ops per local step instead of per-leaf/per-client
     "flat_fed": {"flat_fed": True},
+    # mesh-native flat engine: the (C, N) buffer stays sharded per
+    # FederationSpec.flat_spec end to end (shard_map kernel pair + psum
+    # dual-norm reduction); compiled HLO is checked for remat copies
+    "flat_fed_sharded": {"flat_fed": True, "flat_sharded": True},
 }
+
+
+def _check_flat_sharded(compiled, cfg, mesh, spec, variant):
+    """flat_fed_sharded copy-count assertion: the compiled module must
+    never rematerialize the full packed (C, N) buffer on one device."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import flat as flatlib
+    from repro.models.model import build_model
+    from repro.sharding.hlo import assert_flat_buffer_sharded
+
+    model = build_model(cfg, jnp.bfloat16)
+    pstruct = jax.eval_shape(model.init, jax.random.key(0))
+    layout = flatlib.layout_of(pstruct, shards=spec.flat_shards(mesh))
+    C = spec.clients_on(mesh)
+    rep = assert_flat_buffer_sharded(compiled, C, layout.padded_size)
+    print(f"[{variant}] ({C}, {layout.padded_size}) flat buffer stays "
+          f"sharded: 0 full-shape HLO hits "
+          f"(gather/copy={rep['gather_or_copy']})", flush=True)
 
 
 def measure(arch: str, shape_id: str, variant: str, *, local_steps=2):
@@ -69,8 +99,11 @@ def measure(arch: str, shape_id: str, variant: str, *, local_steps=2):
         L1, L2 = _calib_depths(cfg)
         rls = []
         for L in (L1, L2):
-            c, *_ = _compile_step(_at_depth(cfg, L), shape, mesh, spec, fl,
+            cfg_L = _at_depth(cfg, L)
+            c, *_ = _compile_step(cfg_L, shape, mesh, spec, fl,
                                   unroll=True, remat=False, **knobs)
+            if knobs.get("flat_sharded"):
+                _check_flat_sharded(c, cfg_L, mesh, spec, variant)
             rls.append(roofline.analyze(c, mesh.size))
         rl = roofline.extrapolate(rls[0], rls[1], L1, L2, cfg.num_layers)
     if cap is not None:

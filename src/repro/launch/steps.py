@@ -15,12 +15,15 @@ from repro.models.model import Model
 
 def make_train_step(model: Model, fl: FLConfig, *, num_rounds: int = 1000,
                     use_pallas: bool = False, remat: bool = False,
-                    flat: Optional[bool] = None):
+                    flat: Optional[bool] = None, mesh=None,
+                    federation=None):
     """One federated round over the (C, K, b, ...) batch layout.
 
     ``flat`` switches in the flat-parameter Δ-SGD engine (defaults to
     ``fl.flat_engine``); under meshes the kernels lower through XLA unless
-    ``use_pallas`` is also set.
+    ``use_pallas`` is also set. ``mesh`` + ``federation`` (flat engine
+    only) keep the packed (C, N) buffer sharded per
+    ``federation.flat_spec(mesh)`` for the whole round.
     """
     copt = get_client_opt(fl.client_opt, fl, use_pallas=use_pallas)
     sopt = get_server_opt(fl.server_opt)
@@ -40,7 +43,8 @@ def make_train_step(model: Model, fl: FLConfig, *, num_rounds: int = 1000,
 
     loss_fn = make_loss(base_loss, fedprox_mu=fl.fedprox_mu)
     round_fn = make_fl_round(loss_fn, copt, sopt, num_rounds=num_rounds,
-                             weighted=fl.weighted_agg, flat=flat_mode)
+                             weighted=fl.weighted_agg, flat=flat_mode,
+                             mesh=mesh, federation=federation)
 
     def train_step(state, client_batches):
         new_state, metrics, _ = round_fn(state, client_batches)

@@ -1,0 +1,49 @@
+"""Post-SPMD HLO inspection for sharding assertions.
+
+After SPMD partitioning, every instruction in ``compiled.as_text()``
+carries PER-DEVICE (local) shapes. If the packed flat (C, N) buffer of
+the sharded flat engine (core/flat.py + FederationSpec.flat_spec) is
+kept sharded end to end, its full global shape can never appear in the
+compiled module — any ``f32[C,N]`` hit means some op (an all-gather, a
+resharding copy, a rematerialized concatenate) rebuilt the unsharded
+buffer on one device. ``flat_buffer_report`` counts those hits, which
+is the machine-checkable form of the ROADMAP open item "the packed
+(C, N) buffer stays client-sharded end to end".
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Sequence
+
+
+def full_shape_lines(hlo_text: str, shape: Sequence[int],
+                     dtype: str = "f32"):
+    """HLO lines mentioning the full (global) ``dtype[shape]`` tensor."""
+    dims = ",".join(str(int(d)) for d in shape)
+    pat = re.compile(rf"\b{re.escape(dtype)}\[{dims}\]")
+    return [ln for ln in hlo_text.splitlines() if pat.search(ln)]
+
+
+def flat_buffer_report(hlo_text: str, C: int, N: int) -> Dict:
+    """Count involuntary rematerializations of the packed (C, N) buffer.
+
+    Returns {"full_shape": #lines with the global f32[C,N] shape,
+             "gather_or_copy": #those lines that are all-gather/copy ops,
+             "sample": first few offending lines}. A sharded round must
+    report full_shape == 0 (the replicated engine reports dozens).
+    """
+    lines = full_shape_lines(hlo_text, (C, N))
+    bad = [ln for ln in lines
+           if "all-gather" in ln or re.search(r"\bcopy\(", ln)]
+    return {"full_shape": len(lines), "gather_or_copy": len(bad),
+            "sample": [ln.strip()[:160] for ln in lines[:4]]}
+
+
+def assert_flat_buffer_sharded(compiled, C: int, N: int) -> Dict:
+    """Raise AssertionError if the compiled module ever materializes the
+    full (C, N) flat buffer; returns the report otherwise."""
+    rep = flat_buffer_report(compiled.as_text(), C, N)
+    assert rep["full_shape"] == 0, (
+        f"packed ({C}, {N}) flat buffer rematerialized in compiled HLO: "
+        f"{rep}")
+    return rep

@@ -40,6 +40,34 @@ class FederationSpec:
     def clients_on(self, mesh: Mesh) -> int:
         return int(np.prod([mesh.shape[a] for a in self.client_axes])) or 1
 
+    # -- flat (C, N) buffer layout (core/flat.py packed engine) ------------
+    def flat_axes(self, mesh: Mesh):
+        """(client_axes, param_shard_axes) for the packed (C, N) buffer:
+        C over the client axes, N over every remaining fsdp/tp axis present
+        in the mesh. Disjoint by construction."""
+        ca = tuple(a for a in self.client_axes if a in mesh.shape)
+        na = tuple(a for a in self.fsdp_axes + self.tp_axes
+                   if a in mesh.shape and a not in ca)
+        return ca, na
+
+    def flat_spec(self, mesh: Mesh) -> P:
+        """PartitionSpec for the packed (C, N) flat buffer: clients over
+        the client axes, the flat param dim over fsdp+tp axes. The layout
+        must be built with ``shards=self.flat_shards(mesh)`` so every
+        device's slab stays lane/row-block aligned."""
+        ca, na = self.flat_axes(mesh)
+        return P(ca if ca else None, na if na else None)
+
+    def flat_client_spec(self, mesh: Mesh) -> P:
+        """PartitionSpec for per-client (C,) vectors (η, θ, ‖g‖)."""
+        ca, _ = self.flat_axes(mesh)
+        return P(ca if ca else None)
+
+    def flat_shards(self, mesh: Mesh) -> int:
+        """Number of shards of the flat param dim N under flat_spec."""
+        _, na = self.flat_axes(mesh)
+        return int(np.prod([mesh.shape[a] for a in na])) or 1
+
 
 def cross_device(mesh: Mesh) -> FederationSpec:
     axes = tuple(a for a in ("pod", "data") if a in mesh.shape)

@@ -1,9 +1,15 @@
 import os
 import sys
 
-# Smoke tests and benches run on the real single CPU device. Only
-# launch/dryrun.py installs the 512 placeholder devices (its own first line).
+# Smoke tests and benches run on the CPU backend. Only launch/dryrun.py
+# installs the 512 placeholder devices (its own first line).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# 8 virtual CPU devices so the sharded flat-engine tests exercise a real
+# (data, model) mesh (tests/test_flat.py `needs8` cases); CI pins the
+# same flag. A user-provided XLA_FLAGS wins — the sharded tests then
+# skip if fewer than 8 devices come up.
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
 
 try:
     import hypothesis  # noqa: F401

@@ -54,6 +54,30 @@ def test_param_specs_divide(arch, mesh_id):
     jax.tree_util.tree_map_with_path(check, shapes)
 
 
+@pytest.mark.parametrize("mesh_id,kind,want_c,want_n,want_shards", [
+    ("single", "cross_device", ("data",), ("model",), 16),
+    ("multi", "cross_device", ("pod", "data"), ("model",), 16),
+    ("single", "cross_silo", None, ("data", "model"), 256),
+    ("multi", "cross_silo", ("pod",), ("data", "model"), 256),
+])
+def test_flat_spec_maps_clients_and_param_shards(mesh_id, kind, want_c,
+                                                 want_n, want_shards):
+    """flat_spec: C over the client axes, N over the remaining fsdp/tp
+    axes; flat_shards is the N-dim shard count the packer pads to."""
+    from repro.sharding.spec import get_federation_spec
+    mesh = MESHES[mesh_id]
+    spec = get_federation_spec(kind, mesh)
+    ps = spec.flat_spec(mesh)
+    assert len(ps) == 2
+    assert ps[0] == want_c and ps[1] == want_n
+    assert spec.flat_shards(mesh) == want_shards
+    # client and param-shard axes never overlap
+    ca, na = spec.flat_axes(mesh)
+    assert not set(ca) & set(na)
+    cs = spec.flat_client_spec(mesh)
+    assert len(cs) <= 1 and (len(cs) == 0 or cs[0] == want_c)
+
+
 def test_dedupe():
     assert tuple(_dedupe(P("model", "model"))) == ("model", None)
     assert tuple(_dedupe(P(("pod", "data"), "data"))) == (("pod", "data"),
