@@ -1,9 +1,9 @@
 """CI benchmark-regression guard.
 
 Compares ``bench_results.csv`` rows against a committed baseline JSON
-(``benchmarks/baseline.json``). For every baseline entry the row must
+(``benchmarks/baseline.json``). For every baseline entry present in the
+csv the row must
 
-  * exist in the csv,
   * keep its ``derived`` column (kernel max |err| vs the oracle) at or
     below ``max_err``,
   * not regress its cost by more than ``max_regression`` (e.g. 1.25 =
@@ -12,8 +12,16 @@ Compares ``bench_results.csv`` rows against a committed baseline JSON
     cancels out, so the guard is meaningful across CI machines; the raw
     us_per_call is only reported.
 
-Modes: ``hard`` exits 1 on any violation (pinned-jax CI leg), ``soft``
-prints violations but exits 0 (latest-jax leg), ``off`` skips entirely.
+A baseline row whose key is MISSING from the results csv is an advisory
+warning, not a failure: newly added baseline rows must not brick result
+files produced by older benchmark runs (or by ``--only`` subsets).
+Entries may carry ``"level": "soft"`` — their breaches are also
+advisory-only, even in hard mode (used for fresh scenario rows whose
+baselines haven't stabilized across runners yet).
+
+Modes: ``hard`` exits 1 on any (non-advisory) violation (pinned-jax CI
+leg), ``soft`` prints violations but exits 0 (latest-jax leg), ``off``
+skips entirely.
 
   python -m benchmarks.compare bench_results.csv benchmarks/baseline.json \
       --mode hard
@@ -41,22 +49,28 @@ def read_results(path: str):
 
 
 def check(results: dict, baseline: dict):
-    """-> (violations, report_lines)."""
-    violations, report = [], []
+    """-> (violations, advisories, report_lines).
+
+    Missing rows are always advisory; entries with ``level: soft`` route
+    ALL their breaches to advisories."""
+    violations, advisories, report = [], [], []
     for name, spec in baseline.items():
+        soft = spec.get("level") == "soft"
+        sink = advisories if soft else violations
         if name not in results:
-            violations.append(f"{name}: row missing from results")
+            advisories.append(f"{name}: row missing from results "
+                              f"(skipped)")
             continue
         us, derived = results[name]
         max_err = spec.get("max_err")
         if max_err is not None and derived > max_err:
-            violations.append(f"{name}: derived {derived:g} > "
-                              f"max_err {max_err:g}")
+            sink.append(f"{name}: derived {derived:g} > "
+                        f"max_err {max_err:g}")
         norm = spec.get("normalize_by")
         if norm is not None:
             if norm not in results:
-                violations.append(f"{name}: normalize_by row {norm!r} "
-                                  f"missing from results")
+                advisories.append(f"{name}: normalize_by row {norm!r} "
+                                  f"missing from results (skipped)")
                 continue
             cost, base = us / results[norm][0], spec["ratio"]
             kind = f"ratio vs {norm}"
@@ -65,12 +79,13 @@ def check(results: dict, baseline: dict):
             kind = "us_per_call"
         limit = base * spec.get("max_regression", 1.25)
         line = (f"{name}: {kind} {cost:.4g} (baseline {base:.4g}, "
-                f"limit {limit:.4g}, raw {us:.0f}us)")
+                f"limit {limit:.4g}, raw {us:.0f}us"
+                + (", soft" if soft else "") + ")")
         report.append(line)
         if cost > limit:
-            violations.append(f"{name}: {kind} {cost:.4g} regressed past "
-                              f"{limit:.4g} (baseline {base:.4g})")
-    return violations, report
+            sink.append(f"{name}: {kind} {cost:.4g} regressed past "
+                        f"{limit:.4g} (baseline {base:.4g})")
+    return violations, advisories, report
 
 
 def main():
@@ -85,15 +100,19 @@ def main():
         return
     with open(args.baseline) as f:
         baseline = json.load(f)
-    violations, report = check(read_results(args.results), baseline)
+    violations, advisories, report = check(read_results(args.results),
+                                           baseline)
     for line in report:
         print("bench guard:", line)
+    for a in advisories:
+        print("bench guard ADVISORY:", a)
     for v in violations:
         print("bench guard VIOLATION:", v)
     if violations and args.mode == "hard":
         sys.exit(1)
     print(f"bench guard: {'soft-' if violations else ''}ok "
-          f"({len(report)} rows checked, mode={args.mode})")
+          f"({len(report)} rows checked, {len(advisories)} advisories, "
+          f"mode={args.mode})")
 
 
 if __name__ == "__main__":

@@ -52,19 +52,35 @@ def _fed(task_id: str, alpha: float, num_clients: int, seed: int,
                                   variable_sizes=vs)
 
 
-def run_fl(opt_name: str, task_id: str, *, alpha: float = 0.1,
+def run_fl(opt_name: str, task_id: str, *, alpha: Optional[float] = None,
            rounds: int = 60, lr: Optional[float] = None,
            model: str = "mlp", server: str = "fedavg",
            fedprox_mu: float = 0.0, delta: float = 0.1,
            local_epochs: int = 1, batch: int = 64, num_clients: int = 60,
            participation: float = 0.1, weighted: bool = False,
            variable_sizes: bool = False, seed: int = 0,
-           engine: str = "vmap") -> Dict:
+           engine: str = "vmap", scenario: Optional[str] = None) -> Dict:
     """One FL training run; returns final test accuracy + timing.
 
     ``engine="flat"`` switches Δ-SGD runs onto the packed flat-parameter
-    round engine (core/fed_round flat path)."""
+    round engine (core/fed_round flat path). ``scenario`` names a
+    federation preset (repro.federation.scenarios) — participation
+    scheduling, heterogeneous K_c, async buffering; its Dirichlet-α hint
+    is used when ``alpha`` is not given, and async scenarios force the
+    flat engine. Scenario runs also return cohort/staleness/K_eff
+    telemetry (see launch/report.scenario_summary)."""
+    scn = None
+    if scenario is not None:
+        from repro.federation import get_scenario
+        # run seed threaded into the scenario: multi-seed sweeps must
+        # vary the cohort / K_c / staleness draws too
+        scn = get_scenario(scenario, seed=seed)
+        if alpha is None:
+            alpha = scn.alpha
+    alpha = 0.1 if alpha is None else alpha
     fed = _fed(task_id, alpha, num_clients, seed, variable_sizes)
+    fed.scenario = scn        # _fed is lru_cached: (re)pin per run
+    fed._round = 0
     init_fn, logits_fn = make_small_model(MODELS[model])
     loss_fn = make_loss(
         lambda p, b: (softmax_ce(logits_fn(p, b["x"]), b["y"]), {}),
@@ -77,29 +93,45 @@ def run_fl(opt_name: str, task_id: str, *, alpha: float = 0.1,
     copt = get_client_opt(opt_name, **kw)
     sopt = get_server_opt(server)
     flat = False
-    if engine == "flat" and opt_name == "delta_sgd":
+    if (engine == "flat" or (scn is not None and scn.is_async)) \
+            and opt_name == "delta_sgd":
         # pallas kernels on TPU; identical fused math via XLA elsewhere
         # (interpret-mode pallas in the round loop would distort timing)
         flat = "pallas" if jax.default_backend() == "tpu" else "xla"
-    rnd = jax.jit(make_fl_round(loss_fn, copt, sopt, num_rounds=rounds,
-                                weighted=weighted, flat=flat))
-    state = init_fl_state(init_fn(jax.random.key(seed)), sopt)
+    rnd = jax.jit(make_fl_round(
+        loss_fn, copt, sopt, num_rounds=rounds, weighted=weighted,
+        flat=flat, scenario=scn, num_clients=num_clients,
+        client_sizes=fed.client_sizes() if scn is not None else None))
+    state = init_fl_state(init_fn(jax.random.key(seed)), sopt, scn)
     K = fed.epoch_steps(batch) * local_epochs
+    ids_rounds, mrows = [], []
     t0 = time.time()
     metrics = {}
     for t in range(rounds):
-        batches, w, _ = fed.sample_round(participation, K, batch)
+        batches, w, ids = fed.sample_round(participation, K, batch,
+                                           round_idx=t)
         state, metrics, _ = rnd(
             state, {"x": jnp.asarray(batches["x"]),
                     "y": jnp.asarray(batches["y"])},
             client_weights=jnp.asarray(w) if weighted else None)
+        if scn is not None:
+            ids_rounds.append(np.asarray(ids))
+            mrows.append({k: float(metrics[k]) for k in
+                          ("stale_mean", "stale_max", "k_eff_mean",
+                           "k_eff_min", "k_eff_max", "flushed")
+                          if k in metrics})
     wall = time.time() - t0
     xt, yt = fed.test_batch(2000)
     acc = float(accuracy(logits_fn(state.params, jnp.asarray(xt)),
                          jnp.asarray(yt)))
-    return {"acc": acc, "wall_s": wall, "us_per_round": wall / rounds * 1e6,
-            "eta": float(metrics.get("eta_mean", np.nan)),
-            "loss": float(metrics.get("loss", np.nan))}
+    out = {"acc": acc, "wall_s": wall, "us_per_round": wall / rounds * 1e6,
+           "eta": float(metrics.get("eta_mean", np.nan)),
+           "loss": float(metrics.get("loss", np.nan))}
+    if scn is not None:
+        from repro.launch.report import scenario_summary
+        out["scenario"] = scenario_summary(scn.name, ids_rounds,
+                                           num_clients, mrows)
+    return out
 
 
 _TUNED: Dict[str, Optional[float]] = {}

@@ -13,6 +13,10 @@ derived = final test accuracy unless stated).
              the ref oracle — correctness, not TPU wall time)
   sharded  : flat Δ-SGD round on a host (data, model) mesh, sharded vs
              replicated (derived = max |param diff| between engines)
+  scenarios: federation scenario presets (repro.federation) on the quick
+             FL harness — sync_iid / dirichlet_stragglers / zipf_async
+             (derived = final accuracy) plus cohort-skew, staleness and
+             effective-K diagnostic rows
 
 Full protocol details: benchmarks/fl_common.py. Run everything:
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only table1,...]
@@ -301,12 +305,41 @@ def sharded(rounds=None):
         emit(f"sharded/flat_round_{name}_{shape[0]}x{shape[1]}", us, err)
 
 
+def scenarios(rounds=None):
+    """Federation scenario presets on the quick FL harness. The accuracy
+    rows (derived = acc) time the full scenario round incl. scheduler
+    draw, lane masking, and (zipf_async) the buffered server path; the
+    diagnostic rows surface the per-round cohort composition / staleness
+    / effective-K telemetry in the benchmark CSV (satellite: report
+    scenario stats in the CSV)."""
+    del rounds
+    from benchmarks import fl_common
+    for name in ("sync_iid", "dirichlet_stragglers", "zipf_async"):
+        # fresh dataset per scenario: round sampling and the scenario
+        # pin are stateful on the cached FederatedDataset
+        fl_common._fed.cache_clear()
+        r = fl_common.run_fl("delta_sgd", "easy", rounds=10,
+                             num_clients=30, scenario=name)
+        emit(f"scenarios/{name}", r["us_per_round"], r["acc"])
+        s = r["scenario"]
+        emit(f"scenarios/{name}/cohort_top5_share", r["us_per_round"],
+             s.get("cohort_top5_share", 0.0))
+        if "k_eff_mean" in s:
+            emit(f"scenarios/{name}/k_eff_mean", r["us_per_round"],
+                 s["k_eff_mean"])
+        if "stale_mean" in s:
+            emit(f"scenarios/{name}/stale_mean", r["us_per_round"],
+                 s["stale_mean"])
+
+
 ALL = {"table1": table1, "table2b": table2b, "table3": table3,
        "table4": table4, "fig4": fig4, "fig5": fig5,
-       # convex keeps its own T=40 protocol; kernels/sharded ignore rounds
+       # convex keeps its own T=40 protocol; kernels/sharded/scenarios
+       # ignore rounds
        "convex": lambda rounds: convex(),
        "kernels": kernels,
-       "sharded": sharded}
+       "sharded": sharded,
+       "scenarios": scenarios}
 
 
 def _write_csv(path: str = "bench_results.csv") -> None:

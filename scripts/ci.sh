@@ -13,6 +13,6 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
 
 python -m pytest -x -q
-python -m benchmarks.run --only kernels,sharded --quick
+python -m benchmarks.run --only kernels,sharded,scenarios --quick
 python -m benchmarks.compare bench_results.csv benchmarks/baseline.json \
     --mode "${BENCH_GUARD:-hard}"

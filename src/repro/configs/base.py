@@ -194,7 +194,15 @@ class FLConfig:
     # flat-parameter Δ-SGD engine: pack the param pytree + client axis
     # into one (C, N) buffer for the whole local scan (core/fed_round)
     flat_engine: bool = False
+    # federation scenario preset name (repro.federation.scenarios): adds
+    # participation scheduling, compute heterogeneity, and/or async
+    # buffered aggregation to the round. None = the plain sync round.
+    scenario: Optional[str] = None
 
     @property
     def clients_per_round(self) -> int:
-        return max(1, int(self.participation * self.num_clients))
+        # shared helper (repro.federation.schedulers.cohort_size): the
+        # data pipeline computes |S_t| with the SAME rounding, so config
+        # and sampled batches can never disagree on the cohort shape.
+        from repro.federation.schedulers import cohort_size
+        return cohort_size(self.participation, self.num_clients)

@@ -175,10 +175,28 @@ def flat_delta_sgd_init(num_clients: int, layout: flatlib.FlatLayout, *,
         jnp.asarray(0, jnp.int32))
 
 
+def _mask_inactive(active, eta, theta, grad_norm, state):
+    """Heterogeneous-K lane masking (repro.federation.heterogeneity): a
+    client past its K_c budget applies η=0 (P untouched — the bf16 round
+    mask is idempotent on already-rounded lanes) and keeps its scalar
+    state frozen. ``prev_grads`` is NOT re-selected: inactivity is a
+    terminal prefix within the round, so a frozen client's stale norm
+    state can never reach an applied update — skipping the (C, N) select
+    keeps the step at exactly two fused kernel launches.
+
+    Returns (eta_applied, eta, theta, grad_norm)."""
+    eta_applied = jnp.where(active, eta, jnp.float32(0.0))
+    eta = jnp.where(active, eta, state.eta)
+    theta = jnp.where(active, theta, state.theta)
+    grad_norm = jnp.where(active, grad_norm, state.prev_grad_norm)
+    return eta_applied, eta, theta, grad_norm
+
+
 def flat_delta_sgd_step(P: jax.Array, G: jax.Array,
                         state: FlatDeltaSGDState, *, gamma: float,
                         delta: float, eta0: float,
                         mask: Optional[jax.Array] = None,
+                        active: Optional[jax.Array] = None,
                         backend: str = "pallas",
                         interpret: Optional[bool] = None):
     """One Δ-SGD local step for ALL clients on packed buffers.
@@ -186,7 +204,9 @@ def flat_delta_sgd_step(P: jax.Array, G: jax.Array,
     P, G: (C, N) packed params/grads. Exactly two Pallas launches
     (batched_norms + batched_apply) regardless of leaf count and client
     count; ``backend="xla"`` runs the same math as fused jnp ops for
-    meshed callers. Returns (new_P, new_state).
+    meshed callers. ``active`` is an optional (C,) bool lane mask for
+    heterogeneous step counts: inactive clients apply η=0 and keep their
+    state frozen, at no extra launch cost. Returns (new_P, new_state).
     """
     first = (state.k == 0)
     if backend == "pallas":
@@ -205,10 +225,16 @@ def flat_delta_sgd_step(P: jax.Array, G: jax.Array,
                            gamma, delta)
     eta = jnp.where(first, jnp.asarray(eta0, jnp.float32), eta)
     theta = jnp.where(first, state.theta, theta)
-    if backend == "pallas":
-        new_P = k.batched_apply(P, G, eta, mask=mask, interpret=interpret)
+    if active is not None:
+        eta_applied, eta, theta, grad_norm = _mask_inactive(
+            active, eta, theta, grad_norm, state)
     else:
-        new_P = kref.batched_apply_ref(P, G, eta, mask)
+        eta_applied = eta
+    if backend == "pallas":
+        new_P = k.batched_apply(P, G, eta_applied, mask=mask,
+                                interpret=interpret)
+    else:
+        new_P = kref.batched_apply_ref(P, G, eta_applied, mask)
     return new_P, FlatDeltaSGDState(G, eta, theta, grad_norm,
                                     state.k + 1)
 
@@ -244,6 +270,7 @@ def flat_delta_sgd_step_sharded(P: jax.Array, G: jax.Array,
                                 state: FlatDeltaSGDState, *, gamma: float,
                                 delta: float, eta0: float, mesh, pspec,
                                 mask: Optional[jax.Array] = None,
+                                active: Optional[jax.Array] = None,
                                 backend: str = "xla",
                                 interpret: Optional[bool] = None):
     """One Δ-SGD local step on a mesh-sharded packed (C, N) buffer.
@@ -254,8 +281,9 @@ def flat_delta_sgd_step_sharded(P: jax.Array, G: jax.Array,
     each local slab stays lane/row-block aligned). Per device: the kernel
     pair runs on the local (C_loc, N_loc) slab; the per-client dual norms
     finish with a single psum over the N-shard axes, so η is exact while
-    N is never gathered. Returns (new_P, new_state) with unchanged
-    shardings.
+    N is never gathered. ``active`` is the optional (C,) heterogeneous-K
+    lane mask (sharded like the other per-client vectors). Returns
+    (new_P, new_state) with unchanged shardings.
     """
     from jax.sharding import PartitionSpec as PS
     ca = pspec[0] if len(pspec) > 0 else None
@@ -265,9 +293,12 @@ def flat_delta_sgd_step_sharded(P: jax.Array, G: jax.Array,
     if backend == "pallas" and interpret is None:
         interpret = jax.default_backend() != "tpu"
     with_mask = mask is not None
+    with_active = active is not None
 
     def local_step(P_l, G_l, Gp_l, eta, theta, pgn, k_ctr, *rest):
-        mask_l = rest[0] if with_mask else None
+        rest = list(rest)
+        mask_l = rest.pop(0) if with_mask else None
+        active_l = rest.pop(0) if with_active else None
         if backend == "pallas":
             from repro.kernels.delta_sgd import delta_sgd as k
             dg2, gg2 = k.batched_norms(G_l, Gp_l, interpret=interpret)
@@ -285,11 +316,17 @@ def flat_delta_sgd_step_sharded(P: jax.Array, G: jax.Array,
         first = (k_ctr == 0)
         eta_n = jnp.where(first, jnp.asarray(eta0, jnp.float32), eta_n)
         theta_n = jnp.where(first, theta, theta_n)
+        if active_l is not None:
+            st = FlatDeltaSGDState(Gp_l, eta, theta, pgn, k_ctr)
+            eta_applied, eta_n, theta_n, grad_norm = _mask_inactive(
+                active_l, eta_n, theta_n, grad_norm, st)
+        else:
+            eta_applied = eta_n
         if backend == "pallas":
-            new_P = k.batched_apply(P_l, G_l, eta_n, mask=mask_l,
+            new_P = k.batched_apply(P_l, G_l, eta_applied, mask=mask_l,
                                     interpret=interpret)
         else:
-            new_P = kref.batched_apply_ref(P_l, G_l, eta_n, mask_l)
+            new_P = kref.batched_apply_ref(P_l, G_l, eta_applied, mask_l)
         return new_P, eta_n, theta_n, grad_norm
 
     ins = [P, G, state.prev_grads, state.eta, state.theta,
@@ -298,6 +335,9 @@ def flat_delta_sgd_step_sharded(P: jax.Array, G: jax.Array,
     if with_mask:
         ins.append(mask)
         specs.append(PS(na))
+    if with_active:
+        ins.append(active)
+        specs.append(vec)
     fn = _shard_map(local_step, mesh, tuple(specs), (buf, vec, vec, vec))
     new_P, eta, theta, grad_norm = fn(*ins)
     return new_P, FlatDeltaSGDState(G, eta, theta, grad_norm,

@@ -34,6 +34,23 @@ reduction (repro.core.delta_sgd.flat_delta_sgd_step_sharded), and the
 round-end aggregation is a sharded mean over the client axes. The caller
 must jit the returned round_fn (sharding constraints require a jit
 context).
+
+Scenario engine (``scenario=`` argument, repro.federation): a
+``Scenario`` adds the heterogeneity the paper motivates Δ-SGD with —
+  * compute heterogeneity: per-client step counts K_c ≤ K_max drawn each
+    round (SpeedModel), lowered as per-step lane masks. The flat engine
+    folds them into the fused kernel pair as η=0 lanes (scan stays
+    fixed-shape, stragglers' dead lanes cost no extra launches); the
+    vmap engine applies the same masking per leaf for parity.
+  * async buffered aggregation (FedBuff-style, flat engine only): client
+    deltas enter a staleness-weighted server buffer
+    (repro.federation.buffer) and the ServerOpt only steps when M
+    updates have accumulated. The buffer rides in ``FLState.buffer``.
+  * cohort reporting: when ``num_clients`` is given the round reports
+    the scheduler's cohort ids (the SAME draw the data pipeline used to
+    gather the batches) plus staleness / effective-K metrics.
+All scenario randomness flows from ``fold_in(key(scenario.seed),
+state.round)``, so rounds are reproducible and host/device draws agree.
 """
 from __future__ import annotations
 
@@ -54,32 +71,81 @@ class FLState(NamedTuple):
     params: Any
     server_state: Any
     round: jax.Array
+    buffer: Any = None      # AsyncBufferState under async scenarios
 
 
-def init_fl_state(params, server_opt: ServerOpt) -> FLState:
+def init_fl_state(params, server_opt: ServerOpt,
+                  scenario=None) -> FLState:
+    """``scenario`` (repro.federation.Scenario): async scenarios allocate
+    the server-side delta buffer; sync scenarios and None leave it out."""
+    buf = None
+    if scenario is not None and scenario.is_async:
+        from repro.federation.buffer import buffer_init
+        buf = buffer_init(params)
     return FLState(params, server_opt.init(params),
-                   jnp.asarray(0, jnp.int32))
+                   jnp.asarray(0, jnp.int32), buf)
+
+
+def _round_metrics(losses, etas, step_counts=None):
+    """Shared metric block. ``losses`` is (C, K); ``etas`` is (C,) with
+    NaN for clients whose optimizer has no scalar step-size state
+    (non-Δ-SGD, groupwise). Under heterogeneous K the per-step losses of
+    a finished client are evaluated at frozen params, so they are masked
+    out of the mean and "last step" means the client's K_c-th step."""
+    if step_counts is None:
+        loss = jnp.mean(losses)
+        last = jnp.mean(losses[:, -1])
+    else:
+        from repro.federation.heterogeneity import active_mask
+        amask = active_mask(step_counts, losses.shape[1])
+        loss = jnp.sum(losses * amask) / jnp.sum(amask)
+        last = jnp.mean(jnp.take_along_axis(
+            losses, (step_counts - 1)[:, None], axis=1)[:, 0])
+    return {"loss": loss, "loss_last_step": last,
+            "eta_mean": jnp.mean(etas),
+            "eta_min": jnp.min(etas),
+            "eta_max": jnp.max(etas)}
 
 
 def _finish_round(state: FLState, agg, losses, etas,
-                  server_opt: ServerOpt):
-    """Shared round tail for both engines: server update + metrics.
-
-    ``losses`` is (C, K); ``etas`` is (C,) with NaN for clients whose
-    optimizer has no scalar step-size state (non-Δ-SGD, groupwise)."""
+                  server_opt: ServerOpt, *, step_counts=None, extra=None):
+    """Shared synchronous round tail: server update + metrics."""
     params, sstate = server_opt.update(state.params, agg,
                                        state.server_state)
-    metrics = {"loss": jnp.mean(losses),
-               "loss_last_step": jnp.mean(losses[:, -1]),
-               "eta_mean": jnp.mean(etas),
-               "eta_min": jnp.min(etas),
-               "eta_max": jnp.max(etas)}
-    return FLState(params, sstate, state.round + 1), metrics
+    metrics = _round_metrics(losses, etas, step_counts)
+    if extra:
+        metrics.update(extra)
+    return FLState(params, sstate, state.round + 1, state.buffer), metrics
+
+
+def _scenario_extras(scenario, round_idx, C, num_clients, client_sizes,
+                     step_counts, rep=lambda x: x):
+    """Cohort / effective-K metrics reported from inside the jitted round.
+
+    ``rep`` pins a draw to REPLICATED sharding under meshes: with
+    ``jax_threefry_partitionable=False`` (the default on the pinned jax)
+    a partitioned threefry emits different bits per shard, so any
+    scenario draw that may be sharded by propagation must be forced
+    replicated to agree with the host pipeline's draw."""
+    extra = {}
+    if scenario is None:
+        return extra
+    if num_clients is not None:
+        sch = scenario.make_scheduler(num_clients, C, sizes=client_sizes)
+        extra["cohort_ids"] = rep(sch.sample(
+            jax.random.key(scenario.seed), round_idx))
+    if step_counts is not None:
+        sc = step_counts.astype(jnp.float32)
+        extra.update(k_eff_mean=jnp.mean(sc), k_eff_min=jnp.min(sc),
+                     k_eff_max=jnp.max(sc))
+    return extra
 
 
 def make_fl_round(loss_fn, client_opt: ClientOpt, server_opt: ServerOpt, *,
                   num_rounds: int, weighted: bool = False,
-                  flat=False, mesh=None, federation=None):
+                  flat=False, mesh=None, federation=None,
+                  scenario=None, num_clients: Optional[int] = None,
+                  client_sizes=None):
     """loss_fn(params, batch, global_params, prev_params)->(loss, metrics).
 
     Returns round_fn(state, client_batches, client_weights=None,
@@ -92,6 +158,11 @@ def make_fl_round(loss_fn, client_opt: ClientOpt, server_opt: ServerOpt, *,
     ``mesh`` + ``federation`` (FederationSpec): flat engine only — keep
     the packed (C, N) buffer sharded per ``federation.flat_spec(mesh)``
     for the whole round (see module docstring). Both or neither.
+
+    ``scenario`` (repro.federation.Scenario): heterogeneous step counts
+    (both engines) and async buffered aggregation (flat engine only).
+    ``num_clients``/``client_sizes`` let the round also report the
+    scheduler's cohort ids (see module docstring).
     """
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
@@ -100,25 +171,48 @@ def make_fl_round(loss_fn, client_opt: ClientOpt, server_opt: ServerOpt, *,
     if mesh is not None and not flat:
         raise ValueError("mesh/federation sharding requires the flat "
                          "engine (flat=...)")
+    if scenario is not None and scenario.is_async and not flat:
+        raise ValueError(
+            "async buffered aggregation requires the flat engine "
+            "(flat=...): the staleness-weighted delta merge is one "
+            "reduction over the packed (C, N) buffer")
 
     if flat:
         return _make_flat_round(grad_fn, client_opt, server_opt,
                                 num_rounds=num_rounds, weighted=weighted,
                                 backend="xla" if flat == "xla" else "pallas",
-                                mesh=mesh, federation=federation)
+                                mesh=mesh, federation=federation,
+                                scenario=scenario, num_clients=num_clients,
+                                client_sizes=client_sizes)
 
-    def one_client(global_params, round_frac, batch_c, prev_c):
+    hetero = scenario is not None and scenario.heterogeneous
+
+    def one_client(global_params, round_frac, batch_c, prev_c, k_c):
         ostate = client_opt.reset(client_opt.init(global_params), round_frac)
+        K = jax.tree_util.tree_leaves(batch_c)[0].shape[0]
 
-        def step(carry, b):
+        def step(carry, inp):
+            b, k_idx = inp
             p, os = carry
             (l, _), g = grad_fn(p, b, global_params, prev_c)
-            p, os = client_opt.update(p, g, os, l)
-            return (p, os), l
+            p_new, os_new = client_opt.update(p, g, os, l)
+            if k_c is not None:
+                # heterogeneous K: past this client's K_c budget the
+                # candidate update is discarded — params and optimizer
+                # state stay frozen (same semantics as the flat engine's
+                # η=0 lane mask).
+                act = k_idx < k_c
+                p_new = jax.tree.map(
+                    lambda a, o: jnp.where(act, a, o), p_new, p)
+                os_new = jax.tree.map(
+                    lambda a, o: jnp.where(act, a, o), os_new, os)
+            return (p_new, os_new), l
 
         from repro.models.common import scan_unroll
-        (p, os), losses = jax.lax.scan(step, (global_params, ostate),
-                                       batch_c, unroll=scan_unroll())
+        (p, os), losses = jax.lax.scan(
+            step, (global_params, ostate),
+            (batch_c, jnp.arange(K, dtype=jnp.int32)),
+            unroll=scan_unroll())
         eta = (os.eta if isinstance(os, DeltaSGDState)
                and not isinstance(os.eta, dict)
                else jnp.asarray(jnp.nan, jnp.float32))
@@ -129,11 +223,16 @@ def make_fl_round(loss_fn, client_opt: ClientOpt, server_opt: ServerOpt, *,
         """-> (new_state, metrics, new_local_params (C, ...))."""
         round_frac = state.round.astype(jnp.float32) / num_rounds
         gp = state.params
+        C = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
+        K = jax.tree_util.tree_leaves(client_batches)[0].shape[1]
+        step_counts = (scenario.draw_step_counts(state.round, C, K)
+                       if hetero else None)
         new_locals, losses, etas = jax.vmap(
             one_client, in_axes=(None, None, 0,
                                  0 if prev_local_params is not None
-                                 else None)
-        )(gp, round_frac, client_batches, prev_local_params)
+                                 else None,
+                                 0 if hetero else None)
+        )(gp, round_frac, client_batches, prev_local_params, step_counts)
 
         if weighted and client_weights is not None:
             w = client_weights / jnp.sum(client_weights)
@@ -146,8 +245,12 @@ def make_fl_round(loss_fn, client_opt: ClientOpt, server_opt: ServerOpt, *,
                 lambda x: jnp.mean(x.astype(jnp.float32), axis=0
                                    ).astype(x.dtype), new_locals)
 
+        extra = _scenario_extras(scenario, state.round, C, num_clients,
+                                 client_sizes, step_counts)
         new_state, metrics = _finish_round(state, agg, losses, etas,
-                                           server_opt)
+                                           server_opt,
+                                           step_counts=step_counts,
+                                           extra=extra)
         return new_state, metrics, new_locals
 
     return round_fn
@@ -155,12 +258,16 @@ def make_fl_round(loss_fn, client_opt: ClientOpt, server_opt: ServerOpt, *,
 
 def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
                      *, num_rounds: int, weighted: bool, backend: str,
-                     mesh=None, federation=None):
+                     mesh=None, federation=None, scenario=None,
+                     num_clients=None, client_sizes=None):
     """Flat-parameter Δ-SGD engine: one packed (C, N) buffer carries every
     leaf of every client's params through the K-step scan; two fused
     kernel launches per local step total. With ``mesh``/``federation``
     the buffer additionally stays sharded per ``federation.flat_spec``
-    for the whole round."""
+    for the whole round. With a ``scenario`` the K-step scan carries the
+    per-client step-count lane mask, and async scenarios route the
+    aggregate through the FedBuff delta buffer instead of the direct
+    server update."""
     hyper = client_opt.hyper
     if (client_opt.name != "delta_sgd" or hyper is None
             or hyper.get("groupwise")):
@@ -168,6 +275,9 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
                          f"client optimizer, got {client_opt.name!r}")
     gamma, delta = hyper["gamma"], hyper["delta"]
     eta0, theta0 = hyper["eta0"], hyper["theta0"]
+
+    hetero = scenario is not None and scenario.heterogeneous
+    is_async = scenario is not None and scenario.is_async
 
     sharded = mesh is not None
     if sharded:
@@ -188,13 +298,14 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
 
         pspec = cspec = nspec = None
 
-    def flat_step(P, G, S, mask):
+    def flat_step(P, G, S, mask, active):
         if sharded:
             return flat_delta_sgd_step_sharded(
                 P, G, S, gamma=gamma, delta=delta, eta0=eta0, mesh=mesh,
-                pspec=pspec, mask=mask, backend=backend)
+                pspec=pspec, mask=mask, active=active, backend=backend)
         return flat_delta_sgd_step(P, G, S, gamma=gamma, delta=delta,
-                                   eta0=eta0, mask=mask, backend=backend)
+                                   eta0=eta0, mask=mask, active=active,
+                                   backend=backend)
 
     def round_fn(state: FLState, client_batches, client_weights=None,
                  prev_local_params=None):
@@ -204,7 +315,18 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
         mask = flatlib.round_mask(layout)
         if mask is not None:
             mask = constrain(mask, nspec)
-        C = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
+        leaves = jax.tree_util.tree_leaves(client_batches)
+        C, K = leaves[0].shape[0], leaves[0].shape[1]
+        # scenario draws are constrained REPLICATED, not client-sharded:
+        # with jax_threefry_partitionable=False a partitioned threefry
+        # yields different bits per shard, which would make the sharded
+        # round disagree with the replicated engine and the host
+        # pipeline. The (C,) vectors are tiny; resharding at the
+        # shard_map boundary is free.
+        from jax.sharding import PartitionSpec as _PS
+        rep = (lambda x: constrain(x, _PS())) if sharded else (lambda x: x)
+        step_counts = (rep(scenario.draw_step_counts(state.round, C, K))
+                       if hetero else None)
 
         # pack once at round start; clients all start from the global params
         if sharded:
@@ -219,6 +341,7 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
         else:
             P = jnp.broadcast_to(flatlib.pack(gp, layout)[None],
                                  (C, layout.padded_size))
+        P_start = P if is_async else None
         S = flat_delta_sgd_init(C, layout, eta0=eta0, theta0=theta0)
         if sharded:
             S = S._replace(prev_grads=constrain(S.prev_grads, pspec),
@@ -231,7 +354,8 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
         batches_t = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1),
                                  client_batches)
 
-        def step(carry, batch_k):
+        def step(carry, inp):
+            batch_k, k_idx = inp
             P, S = carry
             params_c = flatlib.unpack_batched(P, layout)
             (l, _), g = jax.vmap(
@@ -240,27 +364,62 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
                                   else None)
             )(params_c, batch_k, gp, prev_local_params)
             G = constrain(flatlib.pack_batched(g, layout), pspec)
-            P, S = flat_step(P, G, S, mask)
+            active = (k_idx < step_counts) if hetero else None
+            P, S = flat_step(P, G, S, mask, active)
             return (P, S), l
 
         from repro.models.common import scan_unroll
-        (P, S), losses = jax.lax.scan(step, (P, S), batches_t,
-                                      unroll=scan_unroll())
+        (P, S), losses = jax.lax.scan(
+            step, (P, S), (batches_t, jnp.arange(K, dtype=jnp.int32)),
+            unroll=scan_unroll())
         losses = losses.T  # (K, C) -> (C, K), same layout as vmap engine
 
-        # aggregate: single (weighted) mean over the packed client axis —
-        # under the sharded engine XLA lowers this to the FedAvg
-        # all-reduce over the client mesh axes; the (N,) result keeps the
-        # flat-dim sharding.
-        if weighted and client_weights is not None:
-            w = client_weights / jnp.sum(client_weights)
-            agg_flat = jnp.tensordot(w.astype(jnp.float32), P, axes=(0, 0))
-        else:
-            agg_flat = jnp.mean(P, axis=0)
-        agg = flatlib.unpack(constrain(agg_flat, nspec), layout)
+        extra = _scenario_extras(scenario, state.round, C, num_clients,
+                                 client_sizes, step_counts, rep=rep)
 
-        new_state, metrics = _finish_round(state, agg, losses, S.eta,
-                                           server_opt)
+        if not is_async:
+            # aggregate: single (weighted) mean over the packed client
+            # axis — under the sharded engine XLA lowers this to the
+            # FedAvg all-reduce over the client mesh axes; the (N,)
+            # result keeps the flat-dim sharding.
+            if weighted and client_weights is not None:
+                w = client_weights / jnp.sum(client_weights)
+                agg_flat = jnp.tensordot(w.astype(jnp.float32), P,
+                                         axes=(0, 0))
+            else:
+                agg_flat = jnp.mean(P, axis=0)
+            agg = flatlib.unpack(constrain(agg_flat, nspec), layout)
+            new_state, metrics = _finish_round(state, agg, losses, S.eta,
+                                               server_opt,
+                                               step_counts=step_counts,
+                                               extra=extra)
+        else:
+            # FedBuff-style async aggregation: one staleness-weighted
+            # reduction over the packed client axis produces the cohort's
+            # delta sum; the server only steps when the buffer holds M
+            # updates (repro.federation.buffer).
+            from repro.federation.buffer import (buffer_merge, buffer_step,
+                                                 staleness_weights)
+            stale = rep(scenario.draw_staleness(state.round, C))
+            w = staleness_weights(stale, scenario.staleness_exp)
+            if weighted and client_weights is not None:
+                w = w * client_weights.astype(jnp.float32)
+            delta_flat = jnp.tensordot(w, P - P_start, axes=(0, 0))
+            delta_tree = flatlib.unpack(constrain(delta_flat, nspec),
+                                        layout, cast=False)
+            buf = buffer_merge(state.buffer, delta_tree, jnp.sum(w), C,
+                               stale)
+            params, sstate, buf, flushed = buffer_step(
+                gp, state.server_state, buf, server_opt,
+                scenario.buffer_size)
+            metrics = _round_metrics(losses, S.eta, step_counts)
+            sf = stale.astype(jnp.float32)
+            extra.update(stale_mean=jnp.mean(sf), stale_max=jnp.max(sf),
+                         buffer_fill=buf.count.astype(jnp.float32),
+                         flushed=flushed)
+            metrics.update(extra)
+            new_state = FLState(params, sstate, state.round + 1, buf)
+
         new_locals = flatlib.unpack_batched(P, layout)
         return new_state, metrics, new_locals
 

@@ -122,10 +122,17 @@ def pack(tree, layout: Optional[FlatLayout] = None) -> jax.Array:
     return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
 
 
-def unpack(buf: jax.Array, layout: FlatLayout):
-    """(N,) buffer -> pytree with original shapes/dtypes (slice views)."""
+def unpack(buf: jax.Array, layout: FlatLayout, *, cast: bool = True):
+    """(N,) buffer -> pytree with original shapes/dtypes (slice views).
+
+    ``cast=False`` keeps every leaf in the buffer's f32 — used by the
+    async aggregation buffer, whose delta accumulator must not lose the
+    sub-bf16 bits of a weighted delta sum."""
     leaves = [buf[s.offset:s.offset + s.size].reshape(s.shape)
-              .astype(s.dtype) for s in layout.leaves]
+              for s in layout.leaves]
+    if cast:
+        leaves = [l.astype(s.dtype)
+                  for l, s in zip(leaves, layout.leaves)]
     return jax.tree_util.tree_unflatten(layout.treedef, leaves)
 
 

@@ -1,6 +1,13 @@
 """Federated batching: client sampling (participation p) and (C, K, b, ...)
 round-batch assembly consumed by ``make_fl_round``.
 
+Cohort selection goes through the federation scheduler protocol
+(repro.federation.schedulers): a JAX-PRNG draw keyed on (seed, round),
+the SAME function the jitted round uses to report cohort composition —
+so the ids this pipeline gathers data for and the ids the round engine
+sees always agree. The cohort size comes from the shared
+``cohort_size`` helper, the single place |S_t| = round(p·m) is computed.
+
 Also provides the synthetic LM round batches used when training the assigned
 transformer architectures federatedly.
 """
@@ -13,22 +20,27 @@ import numpy as np
 
 from repro.data.dirichlet import dirichlet_partition
 from repro.data.synthetic import TaskData
+from repro.federation.schedulers import cohort_size, make_scheduler
 
 
 @dataclass
 class FederatedDataset:
     task: TaskData
     clients: List[np.ndarray]          # per-client index arrays
-    rng: np.random.Generator
+    rng: np.random.Generator           # within-client example sampling
+    seed: int = 0                      # scheduler PRNG seed (cohort draw)
+    scenario: object = None            # optional repro.federation.Scenario
+    _round: int = field(default=0, repr=False)
 
     @classmethod
     def build(cls, task: TaskData, *, num_clients: int, alpha: float,
               samples_per_client: int = 500, seed: int = 0,
-              variable_sizes=None) -> "FederatedDataset":
+              variable_sizes=None, scenario=None) -> "FederatedDataset":
         clients = dirichlet_partition(task.y, num_clients, alpha,
                                       samples_per_client, seed=seed,
                                       variable_sizes=variable_sizes)
-        return cls(task, clients, np.random.default_rng(seed + 17))
+        return cls(task, clients, np.random.default_rng(seed + 17),
+                   seed=seed, scenario=scenario)
 
     @property
     def num_clients(self) -> int:
@@ -37,13 +49,36 @@ class FederatedDataset:
     def client_sizes(self) -> np.ndarray:
         return np.array([len(c) for c in self.clients], np.float32)
 
+    def _scheduler(self, C: int):
+        """Scheduler + base key for the cohort draw. With a scenario the
+        draw is the scenario's (scheduler kind, seed) — identical to the
+        in-round reporting draw; without one it is the uniform scheduler
+        keyed on the dataset seed (the seed repo's protocol, now on JAX
+        PRNG)."""
+        import jax
+        if self.scenario is not None:
+            sch = self.scenario.make_scheduler(
+                self.num_clients, C, sizes=self.client_sizes())
+            return sch, jax.random.key(self.scenario.seed)
+        sch = make_scheduler("uniform", num_clients=self.num_clients,
+                             cohort=C)
+        return sch, jax.random.key(self.seed)
+
     def sample_round(self, participation: float, local_steps: int,
-                     batch_size: int):
+                     batch_size: int, round_idx: Optional[int] = None):
         """Returns (client_batches dict of (C,K,b,...) arrays,
-        client_weights (C,), client_ids)."""
+        client_weights (C,), client_ids).
+
+        ``round_idx`` defaults to an internal counter (one per call), so
+        driver loops that also track rounds can pass their own t and
+        stay aligned with the jitted round's scenario draws."""
         m = self.num_clients
-        C = max(1, int(round(participation * m)))
-        ids = self.rng.choice(m, size=C, replace=False)
+        C = cohort_size(participation, m)
+        t = self._round if round_idx is None else round_idx
+        if round_idx is None:
+            self._round += 1
+        sch, key = self._scheduler(C)
+        ids = np.asarray(sch.sample(key, t))
         xs, ys = [], []
         for i in ids:
             idx = self.clients[i]

@@ -1,0 +1,32 @@
+"""Federation scenario engine: device-side client sampling, compute
+heterogeneity, and async buffered aggregation (see ROADMAP §Scenarios).
+
+  schedulers    — who participates (uniform / size-weighted / zipf /
+                  cyclic), drawn with JAX PRNG so cohort selection can
+                  live inside the jitted round.
+  heterogeneity — how many local steps each client manages (K_c ≤ K_max),
+                  lowered as per-step lane masks on the flat engine.
+  buffer        — FedBuff-style server-side delta buffer with staleness-
+                  weighted merges into any ServerOpt.
+  scenarios     — named presets bundling all three axes, threaded through
+                  FLConfig / fed_round / launch / benchmarks.
+"""
+from repro.federation.buffer import (AsyncBufferState, buffer_init,
+                                     buffer_merge, buffer_step,
+                                     staleness_weights)
+from repro.federation.heterogeneity import (SPEED_MODELS, SpeedModel,
+                                            active_mask, step_active)
+from repro.federation.schedulers import (SCHEDULERS, CyclicScheduler,
+                                         Scheduler, SizeWeightedScheduler,
+                                         UniformScheduler, ZipfScheduler,
+                                         cohort_size, make_scheduler)
+from repro.federation.scenarios import SCENARIOS, Scenario, get_scenario
+
+__all__ = [
+    "AsyncBufferState", "buffer_init", "buffer_merge", "buffer_step",
+    "staleness_weights", "SPEED_MODELS", "SpeedModel", "active_mask",
+    "step_active", "SCHEDULERS", "Scheduler", "UniformScheduler",
+    "SizeWeightedScheduler", "ZipfScheduler", "CyclicScheduler",
+    "cohort_size", "make_scheduler", "SCENARIOS", "Scenario",
+    "get_scenario",
+]

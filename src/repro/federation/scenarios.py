@@ -1,0 +1,125 @@
+"""Scenario registry: named (participation × compute × aggregation) regimes.
+
+A ``Scenario`` bundles the three heterogeneity axes the paper names —
+data distribution (a Dirichlet-α hint for the data pipeline),
+participation (a scheduler kind), computing power (a speed model) — plus
+the aggregation discipline (synchronous FedAvg vs FedBuff-style async
+buffering). It is a frozen, hashable config object: the round engine
+closes over it, and all of its randomness flows from
+``fold_in(key(seed), round)`` so host pipeline and jitted round agree.
+
+Presets (the scenario table in README §Federation scenarios):
+
+  name                 participation   K_c model      aggregation
+  -------------------- --------------- -------------- ------------------
+  sync_iid             uniform         fixed K_max    sync (seed path)
+  sync_dirichlet       uniform         fixed K_max    sync   (α=0.1)
+  size_weighted        size-weighted   fixed K_max    sync
+  dirichlet_stragglers uniform         30% stragglers sync   (α=0.1)
+  cyclic_hetero        cyclic window   U{K/4..K}      sync
+  zipf_async           zipf (s=1.2)    U{K/4..K}      async buffer M=8
+
+``sync_iid`` is the exact seed configuration: fixed speed emits no masks
+and sync aggregation takes the unmodified round tail, so it reproduces
+the pre-scenario engines bit for bit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.federation.heterogeneity import SpeedModel
+from repro.federation.schedulers import make_scheduler
+
+
+@dataclass(frozen=True)
+class Scenario:
+    name: str
+    # participation
+    scheduler: str = "uniform"       # uniform|size_weighted|zipf|cyclic
+    zipf_s: float = 1.2
+    window_frac: float = 0.25        # cyclic availability window
+    # compute heterogeneity
+    speed: str = "fixed"             # fixed|uniform|stragglers
+    k_min_frac: float = 0.25
+    straggler_frac: float = 0.3
+    # aggregation
+    aggregation: str = "sync"        # sync|async
+    buffer_size: int = 8             # M (async)
+    staleness_max: int = 4           # s_c ~ U{0..staleness_max} (async)
+    staleness_exp: float = 0.5       # w(s) = (1+s)^-a (async)
+    # data hint consumed by drivers/benchmarks (not by the round engine)
+    alpha: Optional[float] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.aggregation not in ("sync", "async"):
+            raise KeyError(f"unknown aggregation {self.aggregation!r}")
+        SpeedModel(self.speed)  # validates the kind
+
+    # ---- derived models -------------------------------------------------
+    @property
+    def speed_model(self) -> SpeedModel:
+        return SpeedModel(self.speed, k_min_frac=self.k_min_frac,
+                          straggler_frac=self.straggler_frac)
+
+    @property
+    def heterogeneous(self) -> bool:
+        return self.speed_model.heterogeneous
+
+    @property
+    def is_async(self) -> bool:
+        return self.aggregation == "async"
+
+    def make_scheduler(self, num_clients: int, cohort: int, sizes=None):
+        return make_scheduler(self.scheduler, num_clients=num_clients,
+                              cohort=cohort, sizes=sizes,
+                              zipf_s=self.zipf_s,
+                              window_frac=self.window_frac)
+
+    # ---- per-round draws (jit-safe; round may be traced) ----------------
+    def round_key(self, round_idx):
+        return jax.random.fold_in(jax.random.key(self.seed), round_idx)
+
+    def draw_step_counts(self, round_idx, num_clients: int,
+                         k_max: int) -> jax.Array:
+        key = jax.random.fold_in(self.round_key(round_idx), 1)
+        return self.speed_model.draw(key, num_clients, k_max)
+
+    def draw_staleness(self, round_idx, num_clients: int) -> jax.Array:
+        """(C,) int32 in [0, staleness_max]: rounds each update has been
+        in flight when it reaches the server buffer."""
+        key = jax.random.fold_in(self.round_key(round_idx), 2)
+        if self.staleness_max <= 0:
+            return jnp.zeros((num_clients,), jnp.int32)
+        return jax.random.randint(key, (num_clients,), 0,
+                                  self.staleness_max + 1, jnp.int32)
+
+
+SCENARIOS: Dict[str, Scenario] = {s.name: s for s in (
+    Scenario("sync_iid", alpha=1.0),
+    Scenario("sync_dirichlet", alpha=0.1),
+    Scenario("size_weighted", scheduler="size_weighted"),
+    Scenario("dirichlet_stragglers", speed="stragglers", alpha=0.1),
+    Scenario("cyclic_hetero", scheduler="cyclic", speed="uniform"),
+    Scenario("zipf_async", scheduler="zipf", speed="uniform",
+             aggregation="async", buffer_size=8),
+)}
+
+
+def get_scenario(name_or_scenario, **overrides) -> Scenario:
+    """Resolve a preset by name (or pass a Scenario through), with
+    optional field overrides, e.g. ``get_scenario("zipf_async",
+    buffer_size=16)``."""
+    if isinstance(name_or_scenario, Scenario):
+        scn = name_or_scenario
+    else:
+        try:
+            scn = SCENARIOS[name_or_scenario]
+        except KeyError:
+            raise KeyError(f"unknown scenario {name_or_scenario!r}; "
+                           f"presets: {sorted(SCENARIOS)}") from None
+    return replace(scn, **overrides) if overrides else scn

@@ -1,0 +1,168 @@
+"""Participation schedulers: who is in the cohort S_t, drawn on device.
+
+The paper motivates Δ-SGD by heterogeneity FL must absorb — "the
+distribution of local data, participation rate, and computing power of
+each client can greatly vary". The seed repo sampled cohorts with a
+host-side ``np.random`` draw, which (a) hard-codes uniform participation
+and (b) keeps cohort selection outside the jitted round. Every scheduler
+here is a pure JAX function of ``(key, round_idx)`` with a fixed cohort
+size, so the draw can run inside ``jax.jit`` (and later inside a
+multi-round ``lax.scan``); ``data/pipeline.py sample_round`` calls the
+same function on host and gathers the selected clients' data, so the ids
+the jitted round reports and the data it consumes always agree.
+
+Sampling is without replacement via the Gumbel-top-k trick: adding iid
+Gumbel noise to log-weights and taking the top C indices draws C distinct
+clients with probability proportional to their weights (Vieira 2014) —
+one fused ``top_k``, no sequential rejection loop, jit/vmap/scan safe.
+
+Schedulers:
+  uniform       — every client equally likely (the paper's protocol).
+  size_weighted — P(i) ∝ n_i local samples (cross-device deployments
+                  where bigger shards check in more often).
+  zipf          — P(i) ∝ (i+1)^(−s): a heavy-tailed availability skew,
+                  the classic "popular devices dominate" regime.
+  cyclic        — only a rotating window of clients is available each
+                  round (diurnal availability); uniform inside the
+                  window.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def cohort_size(participation: float, num_clients: int) -> int:
+    """|S_t| = round(p·m), floored at 1 — the ONE place this is computed.
+
+    (The seed repo truncated in ``FLConfig.clients_per_round`` but rounded
+    in ``data/pipeline.py``; p=0.15, m=10 gave cohorts of 1 or 2 depending
+    on the caller.)
+    """
+    return max(1, int(round(participation * num_clients)))
+
+
+def _gumbel_top_k(key, log_w: jax.Array, k: int) -> jax.Array:
+    """k distinct indices ~ P(i) ∝ exp(log_w[i]), via Gumbel-top-k."""
+    g = jax.random.gumbel(key, log_w.shape, jnp.float32)
+    _, ids = jax.lax.top_k(log_w + g, k)
+    return ids.astype(jnp.int32)
+
+
+@dataclass(frozen=True)
+class Scheduler:
+    """Protocol + base: subclasses define ``log_weights(round_idx)``.
+
+    ``sample(key, round_idx)`` folds the round index into the key, so one
+    base key yields an independent, reproducible draw per round — the
+    host pipeline and the jitted round call it with the same (key, t) and
+    get the same cohort.
+    """
+    num_clients: int
+    cohort: int
+    name: str = "uniform"
+
+    def __post_init__(self):
+        if not (1 <= self.cohort <= self.num_clients):
+            raise ValueError(f"cohort {self.cohort} must be in "
+                             f"[1, {self.num_clients}]")
+
+    def log_weights(self, round_idx) -> jax.Array:
+        del round_idx
+        return jnp.zeros((self.num_clients,), jnp.float32)
+
+    def sample(self, key, round_idx) -> jax.Array:
+        """(cohort,) distinct int32 client ids for round ``round_idx``."""
+        key = jax.random.fold_in(key, round_idx)
+        return _gumbel_top_k(key, self.log_weights(round_idx), self.cohort)
+
+
+@dataclass(frozen=True)
+class UniformScheduler(Scheduler):
+    name: str = "uniform"
+
+
+@dataclass(frozen=True)
+class SizeWeightedScheduler(Scheduler):
+    """P(i) ∝ n_i. ``sizes`` is the (m,) per-client sample-count vector;
+    stored as a tuple so the dataclass stays hashable/static under jit."""
+    sizes: tuple = ()
+    name: str = "size_weighted"
+
+    def __post_init__(self):
+        super().__post_init__()
+        if len(self.sizes) != self.num_clients:
+            raise ValueError(f"sizes has {len(self.sizes)} entries for "
+                             f"{self.num_clients} clients")
+
+    def log_weights(self, round_idx) -> jax.Array:
+        del round_idx
+        s = jnp.asarray(self.sizes, jnp.float32)
+        return jnp.log(jnp.maximum(s, 1e-6))
+
+
+@dataclass(frozen=True)
+class ZipfScheduler(Scheduler):
+    """P(i) ∝ (i+1)^(−s): client 0 is the most available, the tail barely
+    participates. s≈1.2 matches common device-availability fits."""
+    s: float = 1.2
+    name: str = "zipf"
+
+    def log_weights(self, round_idx) -> jax.Array:
+        del round_idx
+        ranks = jnp.arange(1, self.num_clients + 1, dtype=jnp.float32)
+        return -self.s * jnp.log(ranks)
+
+
+@dataclass(frozen=True)
+class CyclicScheduler(Scheduler):
+    """Rotating availability window: at round t only clients with
+    ``(i − t·stride) mod m < window`` are up; the cohort is drawn
+    uniformly among them. ``window ≥ cohort`` is enforced so the draw
+    never has to pick an unavailable (−inf weight) client."""
+    window_frac: float = 0.25
+    name: str = "cyclic"
+
+    @property
+    def window(self) -> int:
+        return max(self.cohort,
+                   int(round(self.window_frac * self.num_clients)))
+
+    @property
+    def stride(self) -> int:
+        return max(1, self.window // 2)
+
+    def log_weights(self, round_idx) -> jax.Array:
+        i = jnp.arange(self.num_clients, dtype=jnp.int32)
+        start = (jnp.asarray(round_idx, jnp.int32) * self.stride) \
+            % self.num_clients
+        avail = ((i - start) % self.num_clients) < self.window
+        return jnp.where(avail, 0.0, -jnp.inf)
+
+
+def make_scheduler(kind: str, *, num_clients: int, cohort: int,
+                   sizes: Optional[np.ndarray] = None,
+                   zipf_s: float = 1.2, window_frac: float = 0.25):
+    """Scheduler factory shared by the data pipeline and the round engine."""
+    if kind == "uniform":
+        return UniformScheduler(num_clients, cohort)
+    if kind == "size_weighted":
+        if sizes is None:
+            # no size information (synthetic / in-round reporting): the
+            # draw degrades to uniform, which is exactly P(i) ∝ equal n_i
+            return UniformScheduler(num_clients, cohort,
+                                    name="size_weighted")
+        return SizeWeightedScheduler(num_clients, cohort,
+                                     sizes=tuple(float(s) for s in sizes))
+    if kind == "zipf":
+        return ZipfScheduler(num_clients, cohort, s=zipf_s)
+    if kind == "cyclic":
+        return CyclicScheduler(num_clients, cohort, window_frac=window_frac)
+    raise KeyError(f"unknown scheduler kind {kind!r}")
+
+
+SCHEDULERS = ("uniform", "size_weighted", "zipf", "cyclic")

@@ -36,7 +36,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 def _state_shardings(mesh, spec, state_struct, param_sh):
     """FLState shardings: params per rules; adaptive server-state slots
-    (m/v, param-shaped) reuse the param shardings; scalars replicated."""
+    (m/v, param-shaped) reuse the param shardings; scalars replicated.
+    The async scenario delta buffer (param-shaped) also reuses the param
+    shardings."""
     from repro.core.fed_round import FLState
 
     pstruct = jax.tree_util.tree_structure(state_struct.params)
@@ -53,8 +55,14 @@ def _state_shardings(mesh, spec, state_struct, param_sh):
     else:
         srv_sh = jax.tree.map(
             lambda l: NamedSharding(mesh, P(*((None,) * l.ndim))), ss)
+    buf_sh = None
+    if state_struct.buffer is not None:
+        from repro.federation.buffer import AsyncBufferState
+        rep = NamedSharding(mesh, P())
+        buf_sh = AsyncBufferState(delta=param_sh, weight=rep, count=rep,
+                                  stale_sum=rep, stale_max=rep)
     return FLState(params=param_sh, server_state=srv_sh,
-                   round=NamedSharding(mesh, P()))
+                   round=NamedSharding(mesh, P()), buffer=buf_sh)
 
 
 def _shard_bytes(struct, shardings):
@@ -123,11 +131,13 @@ def analytic_memory(cfg, shape, spec, mesh, pstruct, param_sh, fl,
 def _compile_step(cfg, shape, mesh, spec, fl, *, unroll, remat,
                   use_pallas=False, seq_shard=False, quant_kv=False,
                   softmax_bf16=False, cache_seq_shard=False,
-                  flat_fed=None, flat_sharded=False):
+                  flat_fed=None, flat_sharded=False, scenario=None):
     """Lower + compile one program variant. Returns (compiled, t_lower,
     t_compile, analytic). ``flat_sharded`` (flat_fed only) threads the
     mesh + FederationSpec into the round so the packed (C, N) buffer
-    stays sharded per ``spec.flat_spec(mesh)``."""
+    stays sharded per ``spec.flat_spec(mesh)``. ``scenario`` (preset
+    name or Scenario) adds heterogeneous-K lane masks / async buffered
+    aggregation to the round."""
     import repro.models.attention as _att
     from repro.models.common import logical_rules, unroll_scans
     _att.SOFTMAX_BF16 = softmax_bf16
@@ -138,11 +148,12 @@ def _compile_step(cfg, shape, mesh, spec, fl, *, unroll, remat,
     t0 = time.time()
     with mesh, unroll_scans(unroll), logical_rules(rules):
         if shape.kind == "train":
-            step, sopt = make_train_step(
+            step, sopt, scn = make_train_step(
                 model, fl, use_pallas=use_pallas, remat=remat, flat=flat_fed,
                 mesh=mesh if (flat_fed and flat_sharded) else None,
-                federation=spec if (flat_fed and flat_sharded) else None)
-            state_struct = abstract_fl_state(model, sopt)
+                federation=spec if (flat_fed and flat_sharded) else None,
+                scenario=scenario)
+            state_struct = abstract_fl_state(model, sopt, scn)
             batch = train_specs(model, shape, fl, spec.clients_on(mesh))
             param_sh = make_param_shardings(spec, mesh, state_struct.params)
             state_sh = _state_shardings(mesh, spec, state_struct, param_sh)
@@ -279,6 +290,43 @@ def lower_one(arch: str, shape_id: str, multi_pod: bool, *,
     return result
 
 
+def scenario_smoke(verbose: bool = True):
+    """CI scenario leg: compile the flat_fed_hetero / flat_fed_async
+    rounds of a reduced config on an 8-virtual-device (4, 2) host mesh
+    and assert the packed (C, N) buffer stays sharded under both
+    scenario variants (the production-mesh versions run via
+    ``launch/perf.py --variants flat_fed_hetero,flat_fed_async``)."""
+    from repro.configs.base import ShapeConfig
+    from repro.core import flat as flatlib
+    from repro.models.model import build_model
+    from repro.sharding.hlo import assert_flat_buffer_sharded
+    from repro.sharding.spec import cross_device
+
+    cfg = get_config("tinyllama-1.1b").reduced(num_layers=2, d_model=256)
+    shape = ShapeConfig("train_smoke", "train", 256, 8)
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    spec = cross_device(mesh)
+    fl = FLConfig(local_steps=2, flat_engine=True)
+    model = build_model(cfg, jnp.bfloat16)
+    pstruct = jax.eval_shape(model.init, jax.random.key(0))
+    layout = flatlib.layout_of(pstruct, shards=spec.flat_shards(mesh))
+    C = spec.clients_on(mesh)
+    for variant, scn in (("flat_fed_hetero", "dirichlet_stragglers"),
+                         ("flat_fed_async", "zipf_async")):
+        t0 = time.time()
+        compiled, *_ = _compile_step(cfg, shape, mesh, spec, fl,
+                                     unroll=False, remat=False,
+                                     flat_fed=True, flat_sharded=True,
+                                     scenario=scn)
+        rep = assert_flat_buffer_sharded(compiled, C, layout.padded_size)
+        if verbose:
+            print(f"[scenario-smoke] {variant} ({scn}): compiled in "
+                  f"{time.time() - t0:.1f}s, ({C}, {layout.padded_size}) "
+                  f"flat buffer stays sharded "
+                  f"(gather/copy={rep['gather_or_copy']})", flush=True)
+    print("scenario smoke passed")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -292,7 +340,15 @@ def main():
                     help="per-local-step activation checkpointing (default)")
     ap.add_argument("--fed-kind", default=None)
     ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--scenario-smoke", action="store_true",
+                    help="compile flat_fed_hetero + flat_fed_async on an "
+                         "8-virtual-device mesh and check the sharded-"
+                         "buffer HLO assertion (CI scenario leg)")
     args = ap.parse_args()
+
+    if args.scenario_smoke:
+        scenario_smoke()
+        return
 
     archs = list(ARCH_IDS) if args.all or not args.arch else [args.arch]
     shapes = list(INPUT_SHAPES) if args.all or not args.shape \

@@ -23,6 +23,15 @@ Variants:
                fsdp/tp axes); the compiled HLO is asserted to contain NO
                rematerialization of the full (C, N) buffer
                (repro.sharding.hlo.assert_flat_buffer_sharded)
+  flat_fed_hetero
+               sharded flat engine under the `dirichlet_stragglers`
+               scenario: per-client step counts K_c ≤ K drawn each round
+               and lowered as η=0 lane masks (repro.federation); HLO
+               assertion as above
+  flat_fed_async
+               sharded flat engine under the `zipf_async` scenario:
+               FedBuff-style staleness-weighted delta buffer in
+               FLState.buffer; HLO assertion as above
 """
 import argparse
 import json
@@ -55,6 +64,15 @@ VARIANT_KNOBS = {
     # FederationSpec.flat_spec end to end (shard_map kernel pair + psum
     # dual-norm reduction); compiled HLO is checked for remat copies
     "flat_fed_sharded": {"flat_fed": True, "flat_sharded": True},
+    # federation scenarios (repro.federation) on the sharded flat engine:
+    # heterogeneous per-client step counts lowered as η=0 lane masks
+    # (dirichlet_stragglers), and FedBuff-style async buffered
+    # aggregation with staleness-weighted merges (zipf_async). Both keep
+    # the 2-launch/step invariant and the sharded-buffer HLO assertion.
+    "flat_fed_hetero": {"flat_fed": True, "flat_sharded": True,
+                        "scenario": "dirichlet_stragglers"},
+    "flat_fed_async": {"flat_fed": True, "flat_sharded": True,
+                       "scenario": "zipf_async"},
 }
 
 

@@ -1,7 +1,9 @@
 """Render EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
-JSON artifacts.
+JSON artifacts, plus the federation scenario report (per-round cohort
+composition, staleness, effective-K distribution).
 
   PYTHONPATH=src python -m repro.launch.report --dir experiments/dryrun
+  PYTHONPATH=src python -m repro.launch.report --dir experiments/train
 """
 from __future__ import annotations
 
@@ -9,6 +11,8 @@ import argparse
 import glob
 import json
 import os
+
+import numpy as np
 
 
 def fmt_t(x):
@@ -70,15 +74,91 @@ def roofline_table(rows):
     return "\n".join(out)
 
 
+# ---------------------------------------------------------------------------
+# federation scenario report (repro.federation): cohort composition,
+# staleness, effective-K — consumed by launch/train.py and benchmarks
+# ---------------------------------------------------------------------------
+def cohort_histogram(ids_per_round, num_clients: int) -> np.ndarray:
+    """(m,) counts: how many cohort slots each client filled across the
+    run. ``ids_per_round`` is a list of per-round id arrays."""
+    h = np.zeros(num_clients, np.int64)
+    for ids in ids_per_round:
+        np.add.at(h, np.asarray(ids, np.int64), 1)
+    return h
+
+
+def scenario_summary(name: str, ids_per_round, num_clients: int,
+                     metrics_per_round) -> dict:
+    """Aggregate one run's scenario telemetry into a report dict:
+    participation histogram stats, mean/max staleness, effective-K
+    distribution, buffer flush rate."""
+    out = {"scenario": name, "rounds": len(metrics_per_round),
+           "num_clients": num_clients}
+    if ids_per_round:
+        h = cohort_histogram(ids_per_round, num_clients)
+        slots = max(1, int(h.sum()))
+        top = np.sort(h)[::-1]
+        out.update(
+            cohort_histogram=h.tolist(),
+            clients_seen=int((h > 0).sum()),
+            cohort_top1_share=float(top[0] / slots),
+            cohort_top5_share=float(top[:5].sum() / slots))
+
+    def agg(key, fn):
+        vals = [m[key] for m in metrics_per_round if key in m]
+        return fn(vals) if vals else None
+
+    for key, fn, as_ in (("stale_mean", np.mean, "stale_mean"),
+                         ("stale_max", np.max, "stale_max"),
+                         ("k_eff_mean", np.mean, "k_eff_mean"),
+                         ("k_eff_min", np.min, "k_eff_min"),
+                         ("k_eff_max", np.max, "k_eff_max"),
+                         ("flushed", np.mean, "flush_rate")):
+        v = agg(key, fn)
+        if v is not None:
+            out[as_] = float(v)
+    return out
+
+
+def scenario_table(rows):
+    """Markdown table over artifacts that carry a scenario report
+    (launch/train.py --scenario --out)."""
+    rows = [r for r in rows if "scenario" in r]
+    if not rows:
+        return "(no scenario artifacts)"
+    out = ["| scenario | rounds | clients seen | top-1/top-5 cohort share "
+           "| stale mean/max | K_eff mean (min..max) | flush rate |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        seen = r.get("clients_seen", "-")
+        share = (f"{r['cohort_top1_share']:.2f}/{r['cohort_top5_share']:.2f}"
+                 if "cohort_top1_share" in r else "-")
+        stale = (f"{r['stale_mean']:.2f}/{r['stale_max']:.0f}"
+                 if "stale_mean" in r else "-")
+        keff = (f"{r['k_eff_mean']:.2f} "
+                f"({r['k_eff_min']:.0f}..{r['k_eff_max']:.0f})"
+                if "k_eff_mean" in r else "-")
+        flush = (f"{r['flush_rate']:.2f}" if "flush_rate" in r else "-")
+        out.append(f"| {r['scenario']} | {r['rounds']} | {seen} | {share} "
+                   f"| {stale} | {keff} | {flush} |")
+    return "\n".join(out)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     args = ap.parse_args()
     rows = load(args.dir)
-    print(f"## Dry-run ({len(rows)} artifacts)\n")
-    print(dryrun_table(rows))
-    print("\n## Roofline (single-pod 16x16, calibrated)\n")
-    print(roofline_table(rows))
+    scen = [r for r in rows if "scenario" in r]
+    dry = [r for r in rows if "scenario" not in r]
+    if dry:
+        print(f"## Dry-run ({len(dry)} artifacts)\n")
+        print(dryrun_table(dry))
+        print("\n## Roofline (single-pod 16x16, calibrated)\n")
+        print(roofline_table(dry))
+    if scen:
+        print(f"\n## Federation scenarios ({len(scen)} runs)\n")
+        print(scenario_table(scen))
 
 
 if __name__ == "__main__":

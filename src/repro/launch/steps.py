@@ -16,19 +16,33 @@ from repro.models.model import Model
 def make_train_step(model: Model, fl: FLConfig, *, num_rounds: int = 1000,
                     use_pallas: bool = False, remat: bool = False,
                     flat: Optional[bool] = None, mesh=None,
-                    federation=None):
+                    federation=None, scenario=None):
     """One federated round over the (C, K, b, ...) batch layout.
 
     ``flat`` switches in the flat-parameter Δ-SGD engine (defaults to
     ``fl.flat_engine``); under meshes the kernels lower through XLA unless
     ``use_pallas`` is also set. ``mesh`` + ``federation`` (flat engine
     only) keep the packed (C, N) buffer sharded per
-    ``federation.flat_spec(mesh)`` for the whole round.
+    ``federation.flat_spec(mesh)`` for the whole round. ``scenario`` (a
+    repro.federation.Scenario or preset name; defaults to
+    ``fl.scenario``) adds heterogeneous step counts and/or async
+    buffered aggregation; async scenarios auto-enable the flat engine
+    (the delta buffer is one reduction over the packed client axis).
+
+    Returns (train_step, sopt, scenario) — the resolved scenario so the
+    caller can allocate a matching ``init_fl_state``.
     """
     copt = get_client_opt(fl.client_opt, fl, use_pallas=use_pallas)
     sopt = get_server_opt(fl.server_opt)
+    if scenario is None and fl.scenario:
+        scenario = fl.scenario
+    if scenario is not None and not hasattr(scenario, "is_async"):
+        from repro.federation import get_scenario
+        scenario = get_scenario(scenario)
     if flat is None:
         flat = fl.flat_engine
+    if scenario is not None and scenario.is_async:
+        flat = True
     flat_mode = False
     if flat:
         if fl.client_opt != "delta_sgd":
@@ -44,13 +58,15 @@ def make_train_step(model: Model, fl: FLConfig, *, num_rounds: int = 1000,
     loss_fn = make_loss(base_loss, fedprox_mu=fl.fedprox_mu)
     round_fn = make_fl_round(loss_fn, copt, sopt, num_rounds=num_rounds,
                              weighted=fl.weighted_agg, flat=flat_mode,
-                             mesh=mesh, federation=federation)
+                             mesh=mesh, federation=federation,
+                             scenario=scenario,
+                             num_clients=fl.num_clients)
 
     def train_step(state, client_batches):
         new_state, metrics, _ = round_fn(state, client_batches)
         return new_state, metrics
 
-    return train_step, sopt
+    return train_step, sopt, scenario
 
 
 def make_prefill_step(model: Model, *, window: Optional[int] = None,
@@ -74,7 +90,9 @@ def make_serve_step(model: Model, *, window: Optional[int] = None,
     return serve_step
 
 
-def abstract_fl_state(model: Model, sopt):
-    """FLState ShapeDtypeStructs without allocating params."""
+def abstract_fl_state(model: Model, sopt, scenario=None):
+    """FLState ShapeDtypeStructs without allocating params (incl. the
+    async delta buffer when ``scenario`` is an async Scenario)."""
     pstruct = jax.eval_shape(model.init, jax.random.key(0))
-    return jax.eval_shape(lambda p: init_fl_state(p, sopt), pstruct)
+    return jax.eval_shape(lambda p: init_fl_state(p, sopt, scenario),
+                          pstruct)

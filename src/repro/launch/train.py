@@ -11,6 +11,16 @@ Examples:
       --reduced --rounds 50 --client-opt delta_sgd
   PYTHONPATH=src python -m repro.launch.train --task hard --model mlp \
       --rounds 200 --client-opt delta_sgd --alpha 0.1
+  PYTHONPATH=src python -m repro.launch.train --task medium --model mlp \
+      --rounds 100 --scenario zipf_async
+
+``--scenario`` selects a federation scenario preset
+(repro.federation.scenarios): participation scheduling, per-client
+compute heterogeneity (K_c ≤ K lane masks), and/or FedBuff-style async
+buffered aggregation. Async scenarios require (and auto-enable) the
+flat Δ-SGD engine. The driver prints a per-run scenario report (cohort
+histogram, staleness, effective-K) and appends it to the ``--out``
+artifact.
 """
 from __future__ import annotations
 
@@ -29,25 +39,76 @@ from repro.data.pipeline import FederatedDataset, lm_round_batches
 from repro.data.synthetic import get_task
 
 
+def _resolve_scenario(args):
+    """Preset with the run's --seed threaded in, so multi-seed sweeps
+    actually vary the cohort / K_c / staleness draws."""
+    if not args.scenario:
+        return None
+    from repro.federation import get_scenario
+    return get_scenario(args.scenario, seed=args.seed)
+
+
+class _ScenarioStats:
+    """Per-run accumulator for the scenario report (launch/report.py):
+    cohort ids per round + the scalar scenario metrics the round emits."""
+
+    def __init__(self, scenario, num_clients):
+        self.scenario, self.num_clients = scenario, num_clients
+        self.ids, self.metrics = [], []
+
+    def update(self, ids, metrics):
+        if ids is not None:
+            self.ids.append(np.asarray(ids))
+        elif "cohort_ids" in metrics:
+            self.ids.append(np.asarray(metrics["cohort_ids"]))
+        self.metrics.append(
+            {k: float(metrics[k]) for k in
+             ("stale_mean", "stale_max", "k_eff_mean", "k_eff_min",
+              "k_eff_max", "flushed", "buffer_fill") if k in metrics})
+
+    def summary(self):
+        from repro.launch.report import scenario_summary
+        return scenario_summary(self.scenario.name, self.ids,
+                                self.num_clients, self.metrics)
+
+    def report(self, out_path=None, extra=None):
+        s = self.summary()
+        if extra:
+            s.update(extra)
+        print("scenario report:", json.dumps(s, indent=2, default=float))
+        if out_path:
+            import os
+            os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+            with open(out_path, "w") as f:
+                json.dump(s, f, indent=2, default=float)
+        return s
+
+
 def train_lm(args):
     from repro.models import build_model
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced(num_layers=args.layers, d_model=args.d_model)
     model = build_model(cfg, jnp.float32)
+    scn = _resolve_scenario(args)
     fl = FLConfig(local_steps=args.local_steps, client_opt=args.client_opt,
                   server_opt=args.server_opt, lr=args.lr,
-                  fedprox_mu=args.fedprox_mu)
+                  fedprox_mu=args.fedprox_mu, scenario=args.scenario,
+                  num_clients=args.num_clients)
     copt = get_client_opt(fl.client_opt, fl, use_pallas=args.use_pallas)
     sopt = get_server_opt(fl.server_opt)
     loss_fn = make_loss(lambda p, b: model.loss(p, b),
                         fedprox_mu=fl.fedprox_mu)
+    flat = "xla" if (scn is not None and scn.is_async) else False
     round_fn = jax.jit(make_fl_round(loss_fn, copt, sopt,
-                                     num_rounds=args.rounds))
+                                     num_rounds=args.rounds, flat=flat,
+                                     scenario=scn,
+                                     num_clients=args.num_clients))
     params = model.init(jax.random.key(args.seed))
-    state = init_fl_state(params, sopt)
+    state = init_fl_state(params, sopt, scn)
     state = _maybe_resume(args, state)
     rng = np.random.default_rng(args.seed)
+    stats = _ScenarioStats(scn, args.num_clients) if scn else None
 
     extras = {}
     if cfg.encoder_layers:
@@ -63,11 +124,15 @@ def train_lm(args):
                                    vocab=cfg.vocab_size, extras=extras)
         batches = jax.tree.map(jnp.asarray, batches)
         state, metrics, _ = round_fn(state, batches)
+        if stats:
+            stats.update(None, metrics)
         _maybe_ckpt(args, state, t)
         if t % max(1, args.rounds // 10) == 0 or t == args.rounds - 1:
             print(f"round {t:4d} loss {float(metrics['loss']):.4f} "
                   f"eta {float(metrics['eta_mean']):.4f} "
                   f"({time.time() - t0:.0f}s)", flush=True)
+    if stats:
+        stats.report(args.out)
     return state
 
 
@@ -89,29 +154,45 @@ def train_paper_task(args):
     from repro.configs.paper_tasks import CNN_PAPER, MLP_SMALL, MLP_WIDE
     from repro.models.small import accuracy, make_small_model, softmax_ce
     task = get_task(args.task, seed=args.seed)
+    scn = _resolve_scenario(args)
     fed = FederatedDataset.build(task, num_clients=args.num_clients,
-                                 alpha=args.alpha, seed=args.seed)
+                                 alpha=args.alpha, seed=args.seed,
+                                 scenario=scn)
     mcfg = {"mlp": MLP_SMALL, "mlp-wide": MLP_WIDE, "cnn": CNN_PAPER}[
         args.model]
     init_fn, logits_fn = make_small_model(mcfg)
     fl = FLConfig(client_opt=args.client_opt, server_opt=args.server_opt,
-                  lr=args.lr, fedprox_mu=args.fedprox_mu)
+                  lr=args.lr, fedprox_mu=args.fedprox_mu,
+                  scenario=args.scenario, num_clients=args.num_clients)
     copt = get_client_opt(fl.client_opt, fl)
     sopt = get_server_opt(fl.server_opt)
     loss_fn = make_loss(
         lambda p, b: (softmax_ce(logits_fn(p, b["x"]), b["y"]), {}),
         fedprox_mu=fl.fedprox_mu)
     K = fed.epoch_steps(args.batch)
-    round_fn = jax.jit(make_fl_round(loss_fn, copt, sopt,
-                                     num_rounds=args.rounds))
-    state = init_fl_state(init_fn(jax.random.key(args.seed)), sopt)
+    flat = "xla" if (scn is not None and scn.is_async) else False
+    round_fn = jax.jit(make_fl_round(
+        loss_fn, copt, sopt, num_rounds=args.rounds, flat=flat,
+        scenario=scn, num_clients=args.num_clients,
+        client_sizes=fed.client_sizes() if scn else None))
+    state = init_fl_state(init_fn(jax.random.key(args.seed)), sopt, scn)
     state = _maybe_resume(args, state)
+    stats = _ScenarioStats(scn, args.num_clients) if scn else None
     t0 = time.time()
     for t in range(args.rounds):
-        batches, w, _ = fed.sample_round(fl.participation, K, args.batch)
+        # key the host-side cohort draw on the ROUND COUNTER IN THE
+        # STATE, not the loop index: after --resume the loop restarts at
+        # 0 but state.round continues, and the jitted round's scenario
+        # draws (step counts, staleness, reported cohort_ids) are keyed
+        # on state.round — this keeps the gathered data and the in-round
+        # draws agreeing across resumes.
+        batches, w, ids = fed.sample_round(fl.participation, K, args.batch,
+                                           round_idx=int(state.round))
         batches = {"x": jnp.asarray(batches["x"]),
                    "y": jnp.asarray(batches["y"])}
         state, metrics, _ = round_fn(state, batches)
+        if stats:
+            stats.update(ids, metrics)
         _maybe_ckpt(args, state, t)
         if t % max(1, args.rounds // 10) == 0 or t == args.rounds - 1:
             xt, yt = fed.test_batch(2000)
@@ -121,6 +202,11 @@ def train_paper_task(args):
                   f"test-acc {float(acc):.4f} "
                   f"eta {float(metrics['eta_mean']):.4f} "
                   f"({time.time() - t0:.0f}s)", flush=True)
+    if stats:
+        xt, yt = fed.test_batch(2000)
+        acc = float(accuracy(logits_fn(state.params, jnp.asarray(xt)),
+                             jnp.asarray(yt)))
+        stats.report(args.out, extra={"final_acc": acc})
     return state
 
 
@@ -143,6 +229,12 @@ def main():
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--client-opt", default="delta_sgd")
     ap.add_argument("--server-opt", default="fedavg")
+    ap.add_argument("--scenario", default=None,
+                    help="federation scenario preset "
+                         "(repro.federation.scenarios: sync_iid, "
+                         "dirichlet_stragglers, zipf_async, ...)")
+    ap.add_argument("--out", default=None,
+                    help="write the scenario report JSON here")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--fedprox-mu", type=float, default=0.0)
     ap.add_argument("--use-pallas", action="store_true")

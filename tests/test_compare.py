@@ -1,0 +1,54 @@
+"""benchmarks/compare.py guard semantics: missing baseline rows are
+advisory (satellite: new baseline rows must not brick older result
+files), and ``level: soft`` entries never hard-fail."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.compare import check  # noqa: E402
+
+
+def test_missing_row_is_advisory_not_violation():
+    violations, advisories, report = check(
+        {}, {"new/row": {"us_per_call": 10.0}})
+    assert violations == []
+    assert len(advisories) == 1 and "missing" in advisories[0]
+    assert report == []
+
+
+def test_missing_normalize_by_row_is_advisory():
+    violations, advisories, _ = check(
+        {"a": (10.0, 0.0)},
+        {"a": {"normalize_by": "gone", "ratio": 1.0}})
+    assert violations == []
+    assert any("normalize_by" in a for a in advisories)
+
+
+def test_soft_level_breach_is_advisory():
+    results = {"a": (30.0, 0.5), "base": (10.0, 0.0)}
+    baseline = {"a": {"normalize_by": "base", "ratio": 1.0,
+                      "max_regression": 1.25, "max_err": 0.1,
+                      "level": "soft"}}
+    violations, advisories, report = check(results, baseline)
+    assert violations == []
+    # both the regression (ratio 3 > 1.25) and max_err breach are soft
+    assert len(advisories) == 2
+    assert any("soft" in line for line in report)
+
+
+def test_hard_violations_still_fire():
+    results = {"a": (30.0, 0.5), "base": (10.0, 0.0)}
+    baseline = {"a": {"normalize_by": "base", "ratio": 1.0,
+                      "max_regression": 1.25, "max_err": 0.1}}
+    violations, advisories, _ = check(results, baseline)
+    assert len(violations) == 2 and advisories == []
+
+
+def test_within_limit_passes_and_reports():
+    results = {"a": (11.0, 0.0), "base": (10.0, 0.0)}
+    baseline = {"a": {"normalize_by": "base", "ratio": 1.0,
+                      "max_regression": 1.25}}
+    violations, advisories, report = check(results, baseline)
+    assert violations == [] and advisories == []
+    assert len(report) == 1 and "ratio vs base" in report[0]

@@ -75,3 +75,56 @@ def test_task_difficulty_ordering():
         Xt = t.x_test.reshape(len(t.y_test), -1)
         accs[tid] = float((Xt @ W).argmax(1).__eq__(t.y_test).mean())
     assert accs["easy"] > accs["hard"] + 0.15, accs
+
+
+# --------------------------------------------------------------------------
+# satellite coverage: assignment uniqueness, alpha limits, sample_round
+# determinism (see ISSUE 3)
+# --------------------------------------------------------------------------
+def test_partition_assigns_each_index_at_most_once():
+    """Every sample index is assigned exactly once across clients while
+    classes last (the partitioner only resamples with replacement once a
+    class pool is exhausted — not the case at this scale)."""
+    task = get_task("easy")
+    clients = dirichlet_partition(task.y, 20, 10.0, 200, seed=11)
+    allidx = np.concatenate(clients)
+    assert len(allidx) == 20 * 200
+    assert len(np.unique(allidx)) == len(allidx)
+
+
+def test_alpha_limits_uniform_vs_concentrated():
+    """alpha→∞: per-client label distribution ≈ the uniform prior;
+    alpha→0: mass concentrates on one or two classes per client."""
+    task = get_task("easy")
+    h_inf = client_label_histogram(
+        task.y, dirichlet_partition(task.y, 30, 1000.0, 500, seed=0))
+    p_inf = h_inf / h_inf.sum(1, keepdims=True)
+    tv_inf = np.abs(p_inf - 1.0 / p_inf.shape[1]).sum(1).mean() / 2
+    assert tv_inf < 0.1, tv_inf
+
+    h0 = client_label_histogram(
+        task.y, dirichlet_partition(task.y, 30, 0.001, 500, seed=0))
+    top_share = (h0.max(1) / h0.sum(1)).mean()
+    assert top_share > 0.9, top_share
+
+
+def test_sample_round_shape_and_determinism():
+    """Two pipelines built from the same seed draw identical cohorts and
+    batches; explicit round_idx pins the cohort draw."""
+    task = get_task("easy")
+    feds = [FederatedDataset.build(task, num_clients=25, alpha=0.5, seed=9)
+            for _ in range(2)]
+    outs = [f.sample_round(0.2, 3, 8) for f in feds]
+    for (b1, w1, i1), (b2, w2, i2) in [(outs[0], outs[1])]:
+        np.testing.assert_array_equal(i1, i2)
+        np.testing.assert_array_equal(w1, w2)
+        np.testing.assert_array_equal(b1["x"], b2["x"])
+        np.testing.assert_array_equal(b1["y"], b2["y"])
+    assert outs[0][0]["x"].shape == (5, 3, 8, task.x.shape[1])
+    # explicit round_idx: same round -> same cohort, later round -> new
+    fed = FederatedDataset.build(task, num_clients=25, alpha=0.5, seed=9)
+    _, _, ids_a = fed.sample_round(0.2, 3, 8, round_idx=4)
+    _, _, ids_b = fed.sample_round(0.2, 3, 8, round_idx=4)
+    np.testing.assert_array_equal(ids_a, ids_b)
+    _, _, ids_c = fed.sample_round(0.2, 3, 8, round_idx=5)
+    assert not np.array_equal(np.sort(ids_a), np.sort(ids_c))
