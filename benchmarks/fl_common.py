@@ -59,7 +59,9 @@ def run_fl(opt_name: str, task_id: str, *, alpha: Optional[float] = None,
            local_epochs: int = 1, batch: int = 64, num_clients: int = 60,
            participation: float = 0.1, weighted: bool = False,
            variable_sizes: bool = False, seed: int = 0,
-           engine: str = "vmap", scenario: Optional[str] = None) -> Dict:
+           engine: str = "vmap", scenario: Optional[str] = None,
+           compression: Optional[str] = None,
+           error_feedback: bool = False) -> Dict:
     """One FL training run; returns final test accuracy + timing.
 
     ``engine="flat"`` switches Δ-SGD runs onto the packed flat-parameter
@@ -68,7 +70,12 @@ def run_fl(opt_name: str, task_id: str, *, alpha: Optional[float] = None,
     scheduling, heterogeneous K_c, async buffering; its Dirichlet-α hint
     is used when ``alpha`` is not given, and async scenarios force the
     flat engine. Scenario runs also return cohort/staleness/K_eff
-    telemetry (see launch/report.scenario_summary)."""
+    telemetry (see launch/report.scenario_summary).
+
+    ``compression`` names a delta-compression kind (repro.compression:
+    "none"/"int8"/"topk"; ``error_feedback`` adds EF21); active
+    compression forces the flat engine too, and the run returns
+    wire-bytes / compression-ratio telemetry under ``"compression"``."""
     scn = None
     if scenario is not None:
         from repro.federation import get_scenario
@@ -77,6 +84,15 @@ def run_fl(opt_name: str, task_id: str, *, alpha: Optional[float] = None,
         scn = get_scenario(scenario, seed=seed)
         if alpha is None:
             alpha = scn.alpha
+    comp = None
+    if (compression is not None or error_feedback
+            or (scn is not None and scn.bandwidth_heterogeneous)):
+        # a bandwidth-heterogeneous scenario activates even a kind="none"
+        # spec (per-client level draws) — same resolution as the launch
+        # drivers, so the preset behaves identically from either entry
+        from repro.compression import get_compression
+        comp = get_compression(compression, error_feedback=error_feedback)
+    comp_active = comp is not None and comp.active(scn)
     alpha = 0.1 if alpha is None else alpha
     fed = _fed(task_id, alpha, num_clients, seed, variable_sizes)
     fed.scenario = scn        # _fed is lru_cached: (re)pin per run
@@ -93,18 +109,22 @@ def run_fl(opt_name: str, task_id: str, *, alpha: Optional[float] = None,
     copt = get_client_opt(opt_name, **kw)
     sopt = get_server_opt(server)
     flat = False
-    if (engine == "flat" or (scn is not None and scn.is_async)) \
-            and opt_name == "delta_sgd":
+    if (engine == "flat" or (scn is not None and scn.is_async)
+            or comp_active) and opt_name == "delta_sgd":
         # pallas kernels on TPU; identical fused math via XLA elsewhere
         # (interpret-mode pallas in the round loop would distort timing)
         flat = "pallas" if jax.default_backend() == "tpu" else "xla"
     rnd = jax.jit(make_fl_round(
         loss_fn, copt, sopt, num_rounds=rounds, weighted=weighted,
         flat=flat, scenario=scn, num_clients=num_clients,
-        client_sizes=fed.client_sizes() if scn is not None else None))
-    state = init_fl_state(init_fn(jax.random.key(seed)), sopt, scn)
+        client_sizes=fed.client_sizes() if scn is not None else None,
+        compression=comp))
+    from repro.federation.schedulers import cohort_size
+    state = init_fl_state(init_fn(jax.random.key(seed)), sopt, scn,
+                          compression=comp,
+                          cohort=cohort_size(participation, num_clients))
     K = fed.epoch_steps(batch) * local_epochs
-    ids_rounds, mrows = [], []
+    ids_rounds, mrows, crows = [], [], []
     t0 = time.time()
     metrics = {}
     for t in range(rounds):
@@ -120,6 +140,10 @@ def run_fl(opt_name: str, task_id: str, *, alpha: Optional[float] = None,
                           ("stale_mean", "stale_max", "k_eff_mean",
                            "k_eff_min", "k_eff_max", "flushed")
                           if k in metrics})
+        if comp_active:
+            crows.append({k: float(metrics[k]) for k in
+                          ("wire_bytes", "comp_ratio", "comp_level_mean")
+                          if k in metrics})
     wall = time.time() - t0
     xt, yt = fed.test_batch(2000)
     acc = float(accuracy(logits_fn(state.params, jnp.asarray(xt)),
@@ -131,6 +155,15 @@ def run_fl(opt_name: str, task_id: str, *, alpha: Optional[float] = None,
         from repro.launch.report import scenario_summary
         out["scenario"] = scenario_summary(scn.name, ids_rounds,
                                            num_clients, mrows)
+    if crows:
+        out["compression"] = {
+            "wire_bytes_round": float(np.mean([r["wire_bytes"]
+                                               for r in crows])),
+            "comp_ratio": float(np.mean([r["comp_ratio"] for r in crows]))}
+        if any("comp_level_mean" in r for r in crows):
+            out["compression"]["level_mean"] = float(np.mean(
+                [r["comp_level_mean"] for r in crows
+                 if "comp_level_mean" in r]))
     return out
 
 

@@ -17,6 +17,13 @@ derived = final test accuracy unless stated).
              FL harness — sync_iid / dirichlet_stragglers / zipf_async
              (derived = final accuracy) plus cohort-skew, staleness and
              effective-K diagnostic rows
+  compression: the flat_fed_compressed variant (repro.compression) on
+             the quick FL harness — none/int8/topk delta compression
+             with EF21 error feedback (derived = final accuracy) plus
+             wire-bytes and compression-ratio rows, the
+             bandwidth_tiered per-client-level scenario, and
+             interpret-mode µs/call + max-err rows for the
+             quantize/dequantize/top-k kernels
 
 Full protocol details: benchmarks/fl_common.py. Run everything:
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only table1,...]
@@ -36,6 +43,18 @@ os.environ.setdefault("XLA_FLAGS",
 import numpy as np
 
 ROWS = []
+
+
+def _timeit(fn, *a, n=3):
+    """Interpret-mode µs/call: one warmup call, then the mean of n
+    blocked calls. Returns (us, last_output)."""
+    import jax
+    fn(*a)
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*a)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n * 1e6, out
 
 
 def emit(name, us, derived):
@@ -145,14 +164,7 @@ def kernels(rounds=None):
     from repro.kernels.mamba2_scan.ops import ssd_scan
     from repro.kernels.mamba2_scan.ref import ssd_ref
     rng = np.random.default_rng(0)
-
-    def timeit(fn, *a, n=3):
-        fn(*a)
-        t0 = time.time()
-        for _ in range(n):
-            out = fn(*a)
-        jax.block_until_ready(out)
-        return (time.time() - t0) / n * 1e6, out
+    timeit = _timeit
 
     g = jnp.asarray(rng.normal(size=(1 << 16,)), jnp.float32)
     gp = jnp.asarray(rng.normal(size=(1 << 16,)), jnp.float32)
@@ -332,14 +344,73 @@ def scenarios(rounds=None):
                  s["stale_mean"])
 
 
+def compression(rounds=None):
+    """Delta compression (repro.compression) on the quick FL harness:
+    the `flat_fed_compressed` variant at each compression kind (with
+    EF21 error feedback), its wire-bytes / compression-ratio columns,
+    the bandwidth_tiered per-client-level scenario, and interpret-mode
+    kernel rows (derived = max |err| vs the pure-jnp oracle)."""
+    del rounds
+    import jax.numpy as jnp
+    from benchmarks import fl_common
+    from repro.kernels.compress import compress as ck, ref as cr
+
+    for kind in ("none", "int8", "topk"):
+        # fresh dataset per run: round sampling is stateful on the
+        # cached FederatedDataset
+        fl_common._fed.cache_clear()
+        r = fl_common.run_fl("delta_sgd", "easy", rounds=10,
+                             num_clients=30, engine="flat",
+                             compression=kind,
+                             error_feedback=(kind != "none"))
+        emit(f"compression/flat_fed_compressed/{kind}",
+             r["us_per_round"], r["acc"])
+        if kind != "none":
+            c = r["compression"]
+            emit(f"compression/flat_fed_compressed/{kind}/wire_bytes",
+                 r["us_per_round"], c["wire_bytes_round"])
+            emit(f"compression/flat_fed_compressed/{kind}/comp_ratio",
+                 r["us_per_round"], c["comp_ratio"])
+
+    # bandwidth axis: per-client levels drawn each round (tiered mix)
+    fl_common._fed.cache_clear()
+    r = fl_common.run_fl("delta_sgd", "easy", rounds=10, num_clients=30,
+                         compression="int8", error_feedback=True,
+                         scenario="bandwidth_tiered")
+    emit("compression/bandwidth_tiered", r["us_per_round"], r["acc"])
+    emit("compression/bandwidth_tiered/comp_ratio", r["us_per_round"],
+         r["compression"]["comp_ratio"])
+    emit("compression/bandwidth_tiered/level_mean", r["us_per_round"],
+         r["compression"].get("level_mean", 0.0))
+
+    # kernel rows: interpret-mode µs/call, derived = max err vs oracle
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4, 1 << 14)), jnp.float32)
+
+    us, (q, s) = _timeit(lambda a: ck.quantize_int8(a, interpret=True), x)
+    qr, sr = cr.quantize_int8_ref(x)
+    err = max(float(jnp.max(jnp.abs(q.astype(jnp.int32)
+                                    - qr.astype(jnp.int32)))),
+              float(jnp.max(jnp.abs(s - sr))))
+    emit("compression/quantize_int8_64k", us, err)
+    us, dq = _timeit(lambda a, b: ck.dequantize_int8(a, b, interpret=True),
+                    q, s)
+    err = float(jnp.max(jnp.abs(dq - cr.dequantize_int8_ref(qr, sr))))
+    emit("compression/dequantize_int8_64k", us, err)
+    us, tk = _timeit(lambda a: ck.topk_mask(a, 32, interpret=True), x)
+    err = float(jnp.max(jnp.abs(tk - cr.topk_mask_ref(x, 32))))
+    emit("compression/topk_mask_64k", us, err)
+
+
 ALL = {"table1": table1, "table2b": table2b, "table3": table3,
        "table4": table4, "fig4": fig4, "fig5": fig5,
-       # convex keeps its own T=40 protocol; kernels/sharded/scenarios
-       # ignore rounds
+       # convex keeps its own T=40 protocol; kernels/sharded/scenarios/
+       # compression ignore rounds
        "convex": lambda rounds: convex(),
        "kernels": kernels,
        "sharded": sharded,
-       "scenarios": scenarios}
+       "scenarios": scenarios,
+       "compression": compression}
 
 
 def _write_csv(path: str = "bench_results.csv") -> None:

@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
-# CI: tier-1 tests (exact ROADMAP verify command) + kernels/sharded
-# benchmark smoke + benchmark-regression guard.
+# CI: tier-1 tests (exact ROADMAP verify command) + kernels/sharded/
+# scenarios/compression benchmark smoke + benchmark-regression guard.
 #
 # BENCH_GUARD=hard|soft|off (default hard): the guard compares
 # bench_results.csv against benchmarks/baseline.json — soft on the
@@ -13,6 +13,6 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
 
 python -m pytest -x -q
-python -m benchmarks.run --only kernels,sharded,scenarios --quick
+python -m benchmarks.run --only kernels,sharded,scenarios,compression --quick
 python -m benchmarks.compare bench_results.csv benchmarks/baseline.json \
     --mode "${BENCH_GUARD:-hard}"

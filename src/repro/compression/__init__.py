@@ -1,0 +1,20 @@
+"""Delta-compression subsystem: pluggable client->server compression on
+the packed (C, N) flat buffer (see README §Delta compression).
+
+  spec — CompressionSpec (kind / k_frac / error_feedback), the LEVELS
+         bandwidth ladder, and analytic wire-byte accounting.
+  ops  — compress_flat / compress_flat_sharded: apply a spec to the
+         flat delta, per-client bandwidth levels as lane selects,
+         chunk-local under shard_map (compress BEFORE the client-mean
+         psum).
+
+Fused kernels live in repro.kernels.compress (int8 quantize/dequantize
+with per-chunk f32 scales, magnitude top-k threshold pass), with the
+pure-jnp oracle in repro.kernels.compress.ref.
+"""
+from repro.compression.ops import compress_flat, compress_flat_sharded
+from repro.compression.spec import (KINDS, LEVELS, CompressionSpec,
+                                    get_compression)
+
+__all__ = ["KINDS", "LEVELS", "CompressionSpec", "get_compression",
+           "compress_flat", "compress_flat_sharded"]

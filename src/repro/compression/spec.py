@@ -1,0 +1,117 @@
+"""CompressionSpec: the pluggable client->server delta-compression config.
+
+The paper motivates Δ-SGD with clients whose data, participation and
+computing power vary; at production scale the fourth axis is BANDWIDTH —
+full-precision deltas are the dominant wire cost of a round. A
+``CompressionSpec`` picks a compressor for the packed (C, N) flat delta
+(repro.compression.ops applies it, repro.kernels.compress supplies the
+fused kernels):
+
+  kind="none"  — identity. The round engines take their exact
+                 pre-compression code path, so results are bit-exact
+                 with an uncompressed run.
+  kind="int8"  — per-chunk symmetric int8 quantization with f32 scales
+                 (chunk = LANES consecutive elements).
+  kind="topk"  — magnitude top-k per chunk: keep
+                 ``k = max(1, round(k_frac * LANES))`` slots, zero the
+                 rest (threshold pass, exactly k kept).
+
+``error_feedback=True`` adds EF21-style error feedback (Richtárik et
+al., 2021): each cohort slot carries a reconstruction state g_c
+(``FLState.ef``), the client ships only the compressed difference
+c_c = C(Δ_c − g_c), and both sides roll g_c ← g_c + c_c — the server
+aggregates the g_c, so compression error does not accumulate across
+rounds. With kind="none" the difference is exact and EF is a no-op up
+to f32 rounding.
+
+The LEVELS ladder ("none" < "int8" < "topk" by wire cost) is shared
+with the scenario engine's ``bandwidth`` heterogeneity axis
+(repro.federation.scenarios): a bandwidth-heterogeneous scenario draws
+a per-client level each round, exactly like K_c on the compute axis,
+and the engine selects the matching compressor per client lane.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.flat import LANES
+
+KINDS = ("none", "int8", "topk")
+# bandwidth-level ladder: index into KINDS, drawn per client per round
+# by bandwidth-heterogeneous scenarios (0 = uncompressed, cheapest wire
+# representation last)
+LEVELS = KINDS
+
+
+@dataclass(frozen=True)
+class CompressionSpec:
+    kind: str = "none"            # none | int8 | topk
+    k_frac: float = 0.25          # topk: keep round(k_frac*LANES)/chunk
+    error_feedback: bool = False  # EF21 state in FLState.ef
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise KeyError(f"unknown compression kind {self.kind!r}; "
+                           f"one of {KINDS}")
+        if not 0.0 < self.k_frac <= 1.0:
+            raise ValueError(f"k_frac must be in (0, 1], got {self.k_frac}")
+
+    @property
+    def k(self) -> int:
+        """topk slots kept per LANES-chunk."""
+        return max(1, min(LANES, int(round(self.k_frac * LANES))))
+
+    @property
+    def level(self) -> int:
+        return KINDS.index(self.kind)
+
+    def active(self, scenario=None) -> bool:
+        """Does this spec change the round at all? Inert specs route the
+        engines through their exact pre-compression code path
+        (bit-exactness guarantee for kind="none")."""
+        if self.kind != "none" or self.error_feedback:
+            return True
+        return scenario is not None and getattr(
+            scenario, "bandwidth_heterogeneous", False)
+
+    # ---- wire accounting (the telemetry the reports surface) ------------
+    def level_wire_bytes(self, n: int) -> np.ndarray:
+        """(len(LEVELS),) f32: client->server payload bytes for an
+        n-element delta at each bandwidth level. int8 ships 1 byte per
+        element + one f32 scale per chunk; topk ships k (f32 value +
+        1-byte lane index) per chunk; none ships raw f32. ``n`` is the
+        VALID element count (FlatLayout.size): tail padding exists only
+        on device and never crosses the wire, so the accounting is
+        identical across per-shard padded layouts."""
+        chunks = -(-n // LANES)
+        return np.asarray([
+            4.0 * n,                          # none: f32
+            1.0 * n + 4.0 * chunks,           # int8: values + scales
+            (4.0 + 1.0) * self.k * chunks,    # topk: values + lane idx
+        ], np.float32)
+
+    def wire_bytes(self, n: int, levels=None, num_clients: int = 1):
+        """Per-client wire bytes for one round's deltas.
+
+        ``levels`` is the optional (C,) int32 per-client bandwidth draw
+        (None = everyone at this spec's kind). Returns a (C,) f32 jnp
+        vector (jit-safe — ``levels`` may be traced)."""
+        table = jnp.asarray(self.level_wire_bytes(n))
+        if levels is None:
+            return jnp.full((num_clients,), table[self.level], jnp.float32)
+        return jnp.take(table, levels)
+
+
+def get_compression(spec_or_kind, **overrides) -> CompressionSpec:
+    """Resolve a CompressionSpec from a spec (passed through), a kind
+    name, or None (-> inert "none" spec), with field overrides."""
+    if spec_or_kind is None:
+        spec_or_kind = "none"
+    if isinstance(spec_or_kind, CompressionSpec):
+        import dataclasses
+        return (dataclasses.replace(spec_or_kind, **overrides)
+                if overrides else spec_or_kind)
+    return CompressionSpec(kind=spec_or_kind, **overrides)

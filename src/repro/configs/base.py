@@ -198,6 +198,20 @@ class FLConfig:
     # participation scheduling, compute heterogeneity, and/or async
     # buffered aggregation to the round. None = the plain sync round.
     scenario: Optional[str] = None
+    # client->server delta compression (repro.compression, flat engine):
+    # kind over the LEVELS ladder ("none"|"int8"|"topk"), the top-k keep
+    # fraction per LANES-chunk, and EF21 error feedback (FLState.ef).
+    # "none" without error feedback is inert — bit-exact seed behavior.
+    compression: str = "none"
+    compression_k_frac: float = 0.25
+    error_feedback: bool = False
+
+    @property
+    def compression_spec(self):
+        from repro.compression import CompressionSpec
+        return CompressionSpec(kind=self.compression,
+                               k_frac=self.compression_k_frac,
+                               error_feedback=self.error_feedback)
 
     @property
     def clients_per_round(self) -> int:

@@ -51,6 +51,21 @@ Scenario engine (``scenario=`` argument, repro.federation): a
     gather the batches) plus staleness / effective-K metrics.
 All scenario randomness flows from ``fold_in(key(scenario.seed),
 state.round)``, so rounds are reproducible and host/device draws agree.
+
+Delta compression (``compression=`` argument, repro.compression, flat
+engine only): each client's round delta Δ_c = x_c^K − x_t is compressed
+on the packed (C, N) buffer before ANY aggregation — int8 per-chunk
+quantization or magnitude top-k, optionally behind EF21 error feedback
+(state in ``FLState.ef``), with per-client bandwidth levels drawn by a
+bandwidth-heterogeneous scenario. The sync tail averages
+x_t + Δ̂_c, the async tail buffers the staleness-weighted Δ̂ sum, so
+compression composes with every ServerOpt and with FedBuff. Under
+meshes the compressors are chunk-local and run inside ``shard_map``
+strictly before the client-mean psum: no full-precision per-client
+delta ever crosses a shard boundary (machine-checked by
+``repro.sharding.hlo.assert_no_fullprec_delta_collective``). An inert
+spec (kind="none") takes the exact pre-compression code path — bit
+exact.
 """
 from __future__ import annotations
 
@@ -72,18 +87,32 @@ class FLState(NamedTuple):
     server_state: Any
     round: jax.Array
     buffer: Any = None      # AsyncBufferState under async scenarios
+    ef: Any = None          # EF21 error-feedback state (compression):
+                            # pytree like params with a leading cohort
+                            # axis, f32 — each slot's reconstruction g_c
 
 
-def init_fl_state(params, server_opt: ServerOpt,
-                  scenario=None) -> FLState:
+def init_fl_state(params, server_opt: ServerOpt, scenario=None,
+                  compression=None, cohort: Optional[int] = None) -> FLState:
     """``scenario`` (repro.federation.Scenario): async scenarios allocate
-    the server-side delta buffer; sync scenarios and None leave it out."""
+    the server-side delta buffer; sync scenarios and None leave it out.
+    ``compression`` (repro.compression.CompressionSpec) with
+    ``error_feedback=True`` allocates the per-cohort-slot EF21
+    reconstruction tree — ``cohort`` (= C, clients per round) is then
+    required to size its leading axis."""
     buf = None
     if scenario is not None and scenario.is_async:
         from repro.federation.buffer import buffer_init
         buf = buffer_init(params)
+    ef = None
+    if compression is not None and compression.error_feedback:
+        if cohort is None:
+            raise ValueError("error-feedback compression needs cohort= "
+                             "(clients per round) to size FLState.ef")
+        ef = jax.tree.map(
+            lambda p: jnp.zeros((cohort,) + p.shape, jnp.float32), params)
     return FLState(params, server_opt.init(params),
-                   jnp.asarray(0, jnp.int32), buf)
+                   jnp.asarray(0, jnp.int32), buf, ef)
 
 
 def _round_metrics(losses, etas, step_counts=None):
@@ -108,14 +137,17 @@ def _round_metrics(losses, etas, step_counts=None):
 
 
 def _finish_round(state: FLState, agg, losses, etas,
-                  server_opt: ServerOpt, *, step_counts=None, extra=None):
-    """Shared synchronous round tail: server update + metrics."""
+                  server_opt: ServerOpt, *, step_counts=None, extra=None,
+                  ef=None):
+    """Shared synchronous round tail: server update + metrics. ``ef`` is
+    the rolled EF21 state (compression); None keeps the incoming one."""
     params, sstate = server_opt.update(state.params, agg,
                                        state.server_state)
     metrics = _round_metrics(losses, etas, step_counts)
     if extra:
         metrics.update(extra)
-    return FLState(params, sstate, state.round + 1, state.buffer), metrics
+    return FLState(params, sstate, state.round + 1, state.buffer,
+                   state.ef if ef is None else ef), metrics
 
 
 def _scenario_extras(scenario, round_idx, C, num_clients, client_sizes,
@@ -145,7 +177,7 @@ def make_fl_round(loss_fn, client_opt: ClientOpt, server_opt: ServerOpt, *,
                   num_rounds: int, weighted: bool = False,
                   flat=False, mesh=None, federation=None,
                   scenario=None, num_clients: Optional[int] = None,
-                  client_sizes=None):
+                  client_sizes=None, compression=None):
     """loss_fn(params, batch, global_params, prev_params)->(loss, metrics).
 
     Returns round_fn(state, client_batches, client_weights=None,
@@ -163,6 +195,12 @@ def make_fl_round(loss_fn, client_opt: ClientOpt, server_opt: ServerOpt, *,
     (both engines) and async buffered aggregation (flat engine only).
     ``num_clients``/``client_sizes`` let the round also report the
     scheduler's cohort ids (see module docstring).
+
+    ``compression`` (repro.compression.CompressionSpec, or a kind name):
+    client->server delta compression on the flat engine — see the
+    module docstring. An inert spec (kind="none", no error feedback, no
+    bandwidth-heterogeneous scenario) leaves every engine on its exact
+    pre-compression code path, so results stay bit-exact.
     """
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
@@ -176,6 +214,18 @@ def make_fl_round(loss_fn, client_opt: ClientOpt, server_opt: ServerOpt, *,
             "async buffered aggregation requires the flat engine "
             "(flat=...): the staleness-weighted delta merge is one "
             "reduction over the packed (C, N) buffer")
+    if compression is not None or (
+            scenario is not None and scenario.bandwidth_heterogeneous):
+        # a bandwidth-heterogeneous scenario implies compression even if
+        # the caller passed none: resolve the inert kind="none" spec
+        # (level 0 of the ladder) so the per-client level draws actually
+        # happen — same resolution as the launch drivers and benchmarks
+        from repro.compression import get_compression
+        compression = get_compression(compression)
+        if compression.active(scenario) and not flat:
+            raise ValueError(
+                "delta compression requires the flat engine (flat=...): "
+                "the compressors operate on the packed (C, N) buffer")
 
     if flat:
         return _make_flat_round(grad_fn, client_opt, server_opt,
@@ -183,7 +233,8 @@ def make_fl_round(loss_fn, client_opt: ClientOpt, server_opt: ServerOpt, *,
                                 backend="xla" if flat == "xla" else "pallas",
                                 mesh=mesh, federation=federation,
                                 scenario=scenario, num_clients=num_clients,
-                                client_sizes=client_sizes)
+                                client_sizes=client_sizes,
+                                compression=compression)
 
     hetero = scenario is not None and scenario.heterogeneous
 
@@ -259,7 +310,8 @@ def make_fl_round(loss_fn, client_opt: ClientOpt, server_opt: ServerOpt, *,
 def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
                      *, num_rounds: int, weighted: bool, backend: str,
                      mesh=None, federation=None, scenario=None,
-                     num_clients=None, client_sizes=None):
+                     num_clients=None, client_sizes=None,
+                     compression=None):
     """Flat-parameter Δ-SGD engine: one packed (C, N) buffer carries every
     leaf of every client's params through the K-step scan; two fused
     kernel launches per local step total. With ``mesh``/``federation``
@@ -267,7 +319,17 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
     for the whole round. With a ``scenario`` the K-step scan carries the
     per-client step-count lane mask, and async scenarios route the
     aggregate through the FedBuff delta buffer instead of the direct
-    server update."""
+    server update.
+
+    Active ``compression`` (repro.compression) reshapes the round tail
+    into the delta-communication form: Δ_c = x_c^K − x_t is compressed
+    per client (optionally behind EF21 error feedback carried in
+    ``FLState.ef``, and per-client bandwidth levels drawn by the
+    scenario), and only the reconstructed Δ̂_c enters the aggregation —
+    under meshes the compressors run shard-locally BEFORE the
+    client-mean psum, so no full-precision per-client delta ever
+    crosses a shard boundary. Wire-bytes / compression-ratio telemetry
+    rides in the round metrics."""
     hyper = client_opt.hyper
     if (client_opt.name != "delta_sgd" or hyper is None
             or hyper.get("groupwise")):
@@ -278,6 +340,10 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
 
     hetero = scenario is not None and scenario.heterogeneous
     is_async = scenario is not None and scenario.is_async
+    bw_hetero = scenario is not None and scenario.bandwidth_heterogeneous
+    comp = compression if (compression is not None
+                           and compression.active(scenario)) else None
+    use_ef = comp is not None and comp.error_feedback
 
     sharded = mesh is not None
     if sharded:
@@ -341,7 +407,7 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
         else:
             P = jnp.broadcast_to(flatlib.pack(gp, layout)[None],
                                  (C, layout.padded_size))
-        P_start = P if is_async else None
+        P_start = P if (is_async or comp is not None) else None
         S = flat_delta_sgd_init(C, layout, eta0=eta0, theta0=theta0)
         if sharded:
             S = S._replace(prev_grads=constrain(S.prev_grads, pspec),
@@ -377,6 +443,63 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
         extra = _scenario_extras(scenario, state.round, C, num_clients,
                                  client_sizes, step_counts, rep=rep)
 
+        # delta compression (repro.compression): compress each client's
+        # round delta before ANY aggregation — only the reconstructed
+        # Δ̂_c (and, under meshes, the post-mean (N,) aggregate) exists
+        # past this point. EF21: the client ships C(Δ_c − g_c) and both
+        # sides roll g_c ← g_c + C(Δ_c − g_c), so Δ̂_c = new g_c and the
+        # compression error does not accumulate across rounds.
+        new_ef = None
+        if comp is not None:
+            from repro.compression.ops import (compress_flat,
+                                               compress_flat_sharded)
+            levels = (rep(scenario.draw_compression_levels(state.round, C))
+                      if bw_hetero else None)
+            delta = P - P_start
+            if use_ef:
+                if state.ef is None:
+                    raise ValueError(
+                        "error-feedback compression needs FLState.ef — "
+                        "allocate it via init_fl_state(..., compression="
+                        "spec, cohort=C)")
+                E = flatlib.pack_batched(state.ef, layout)
+                if sharded:
+                    E = constrain(E, pspec)
+                resid = delta - E
+            else:
+                E, resid = None, delta
+            if sharded:
+                chat = compress_flat_sharded(resid, comp, mesh=mesh,
+                                             pspec=pspec, levels=levels,
+                                             backend=backend)
+            else:
+                chat = compress_flat(resid, comp, levels=levels,
+                                     backend=backend)
+            delta_hat = (E + chat) if E is not None else chat
+            if sharded:
+                delta_hat = constrain(delta_hat, pspec)
+            if use_ef:
+                new_ef = flatlib.unpack_batched(delta_hat, layout,
+                                                cast=False)
+            # wire accounting over the VALID elements (layout.size):
+            # tail padding never ships, so sharded and replicated
+            # layouts (different padded_size) report identical bytes
+            wire = comp.wire_bytes(layout.size, levels=levels,
+                                   num_clients=C)
+            extra.update(
+                wire_bytes=jnp.sum(wire),
+                comp_ratio=(4.0 * layout.size * C) / jnp.sum(wire))
+            if levels is not None:
+                extra["comp_level_mean"] = jnp.mean(
+                    levels.astype(jnp.float32))
+            # what the server aggregates: round-start params + the
+            # reconstructed deltas (≡ P exactly when the spec is inert —
+            # inert specs never reach this branch)
+            P_agg = P_start + delta_hat
+        else:
+            delta_hat = None
+            P_agg = P
+
         if not is_async:
             # aggregate: single (weighted) mean over the packed client
             # axis — under the sharded engine XLA lowers this to the
@@ -384,15 +507,15 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
             # result keeps the flat-dim sharding.
             if weighted and client_weights is not None:
                 w = client_weights / jnp.sum(client_weights)
-                agg_flat = jnp.tensordot(w.astype(jnp.float32), P,
+                agg_flat = jnp.tensordot(w.astype(jnp.float32), P_agg,
                                          axes=(0, 0))
             else:
-                agg_flat = jnp.mean(P, axis=0)
+                agg_flat = jnp.mean(P_agg, axis=0)
             agg = flatlib.unpack(constrain(agg_flat, nspec), layout)
             new_state, metrics = _finish_round(state, agg, losses, S.eta,
                                                server_opt,
                                                step_counts=step_counts,
-                                               extra=extra)
+                                               extra=extra, ef=new_ef)
         else:
             # FedBuff-style async aggregation: one staleness-weighted
             # reduction over the packed client axis produces the cohort's
@@ -404,7 +527,9 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
             w = staleness_weights(stale, scenario.staleness_exp)
             if weighted and client_weights is not None:
                 w = w * client_weights.astype(jnp.float32)
-            delta_flat = jnp.tensordot(w, P - P_start, axes=(0, 0))
+            delta_flat = jnp.tensordot(
+                w, delta_hat if comp is not None else (P - P_start),
+                axes=(0, 0))
             delta_tree = flatlib.unpack(constrain(delta_flat, nspec),
                                         layout, cast=False)
             buf = buffer_merge(state.buffer, delta_tree, jnp.sum(w), C,
@@ -418,7 +543,8 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
                          buffer_fill=buf.count.astype(jnp.float32),
                          flushed=flushed)
             metrics.update(extra)
-            new_state = FLState(params, sstate, state.round + 1, buf)
+            new_state = FLState(params, sstate, state.round + 1, buf,
+                                state.ef if new_ef is None else new_ef)
 
         new_locals = flatlib.unpack_batched(P, layout)
         return new_state, metrics, new_locals

@@ -148,9 +148,16 @@ def pack_batched(tree, layout: Optional[FlatLayout] = None) -> jax.Array:
     return jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
 
 
-def unpack_batched(buf: jax.Array, layout: FlatLayout):
-    """(C, N) buffer -> pytree with (C, *shape) leaves, original dtypes."""
+def unpack_batched(buf: jax.Array, layout: FlatLayout, *,
+                   cast: bool = True):
+    """(C, N) buffer -> pytree with (C, *shape) leaves, original dtypes.
+
+    ``cast=False`` keeps every leaf in the buffer's f32 — used for the
+    per-client EF21 error-feedback state (repro.compression), whose
+    reconstruction tree must not lose sub-bf16 bits between rounds."""
     C = buf.shape[0]
     leaves = [buf[:, s.offset:s.offset + s.size].reshape((C,) + s.shape)
-              .astype(s.dtype) for s in layout.leaves]
+              for s in layout.leaves]
+    if cast:
+        leaves = [l.astype(s.dtype) for l, s in zip(leaves, layout.leaves)]
     return jax.tree_util.tree_unflatten(layout.treedef, leaves)

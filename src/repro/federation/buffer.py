@@ -23,6 +23,12 @@ protocol, simulated fully on device with fixed shapes:
 With staleness ≡ 0 and M = C the flush happens every round with unit
 weights, and the pseudo-average IS the plain client mean — the async
 path then reproduces synchronous FedAvg (parity-tested).
+
+Delta compression (repro.compression): under a compressed round the
+engine hands ``buffer_merge`` the staleness-weighted sum of the
+DEQUANTIZED reconstructions Δ̂_c — compression happens on the client
+side of the wire, so the buffer always accumulates dense f32 deltas and
+the staleness weights (and every flush rule below) are unchanged.
 """
 from __future__ import annotations
 

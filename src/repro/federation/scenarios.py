@@ -1,23 +1,28 @@
-"""Scenario registry: named (participation × compute × aggregation) regimes.
+"""Scenario registry: named (participation × compute × aggregation ×
+bandwidth) regimes.
 
-A ``Scenario`` bundles the three heterogeneity axes the paper names —
-data distribution (a Dirichlet-α hint for the data pipeline),
-participation (a scheduler kind), computing power (a speed model) — plus
-the aggregation discipline (synchronous FedAvg vs FedBuff-style async
-buffering). It is a frozen, hashable config object: the round engine
-closes over it, and all of its randomness flows from
-``fold_in(key(seed), round)`` so host pipeline and jitted round agree.
+A ``Scenario`` bundles the heterogeneity axes the paper names — data
+distribution (a Dirichlet-α hint for the data pipeline), participation
+(a scheduler kind), computing power (a speed model) — plus the
+aggregation discipline (synchronous FedAvg vs FedBuff-style async
+buffering) and the BANDWIDTH axis: per-client delta-compression levels
+drawn per round exactly like K_c on the compute axis
+(repro.compression.LEVELS ladder: 0=none, 1=int8, 2=topk). It is a
+frozen, hashable config object: the round engine closes over it, and
+all of its randomness flows from ``fold_in(key(seed), round)`` so host
+pipeline and jitted round agree.
 
 Presets (the scenario table in README §Federation scenarios):
 
-  name                 participation   K_c model      aggregation
-  -------------------- --------------- -------------- ------------------
-  sync_iid             uniform         fixed K_max    sync (seed path)
-  sync_dirichlet       uniform         fixed K_max    sync   (α=0.1)
-  size_weighted        size-weighted   fixed K_max    sync
-  dirichlet_stragglers uniform         30% stragglers sync   (α=0.1)
-  cyclic_hetero        cyclic window   U{K/4..K}      sync
-  zipf_async           zipf (s=1.2)    U{K/4..K}      async buffer M=8
+  name                 participation   K_c model      aggregation  bandwidth
+  -------------------- --------------- -------------- ------------ ---------
+  sync_iid             uniform         fixed K_max    sync (seed)  fixed
+  sync_dirichlet       uniform         fixed K_max    sync (α=0.1) fixed
+  size_weighted        size-weighted   fixed K_max    sync         fixed
+  dirichlet_stragglers uniform         30% stragglers sync (α=0.1) fixed
+  cyclic_hetero        cyclic window   U{K/4..K}      sync         fixed
+  zipf_async           zipf (s=1.2)    U{K/4..K}      async M=8    fixed
+  bandwidth_tiered     uniform         fixed K_max    sync         tiered
 
 ``sync_iid`` is the exact seed configuration: fixed speed emits no masks
 and sync aggregation takes the unmodified round tail, so it reproduces
@@ -31,8 +36,13 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.compression.spec import LEVELS
 from repro.federation.heterogeneity import SpeedModel
 from repro.federation.schedulers import make_scheduler
+
+# size of the compression-level ladder (none < int8 < topk); tier_probs
+# must match it and every bandwidth draw stays inside it
+_NUM_LEVELS = len(LEVELS)
 
 
 @dataclass(frozen=True)
@@ -51,6 +61,14 @@ class Scenario:
     buffer_size: int = 8             # M (async)
     staleness_max: int = 4           # s_c ~ U{0..staleness_max} (async)
     staleness_exp: float = 0.5       # w(s) = (1+s)^-a (async)
+    # bandwidth heterogeneity: per-client delta-compression level over
+    # the repro.compression.LEVELS ladder (0=none, 1=int8, 2=topk),
+    # drawn per round like K_c. "fixed" = everyone at the run's
+    # CompressionSpec.kind (no draw); "uniform" = level ~ U{0..2};
+    # "tiered" = categorical over tier_probs (the fleet mix: a few
+    # well-connected clients, mostly int8, a top-k tail).
+    bandwidth: str = "fixed"         # fixed|uniform|tiered
+    tier_probs: tuple = (0.2, 0.5, 0.3)
     # data hint consumed by drivers/benchmarks (not by the round engine)
     alpha: Optional[float] = None
     seed: int = 0
@@ -58,6 +76,13 @@ class Scenario:
     def __post_init__(self):
         if self.aggregation not in ("sync", "async"):
             raise KeyError(f"unknown aggregation {self.aggregation!r}")
+        if self.bandwidth not in ("fixed", "uniform", "tiered"):
+            raise KeyError(f"unknown bandwidth model {self.bandwidth!r}")
+        if len(self.tier_probs) != _NUM_LEVELS:
+            raise ValueError(
+                f"tier_probs must have one entry per compression level "
+                f"(repro.compression.LEVELS, {_NUM_LEVELS}), got "
+                f"{len(self.tier_probs)}")
         SpeedModel(self.speed)  # validates the kind
 
     # ---- derived models -------------------------------------------------
@@ -73,6 +98,10 @@ class Scenario:
     @property
     def is_async(self) -> bool:
         return self.aggregation == "async"
+
+    @property
+    def bandwidth_heterogeneous(self) -> bool:
+        return self.bandwidth != "fixed"
 
     def make_scheduler(self, num_clients: int, cohort: int, sizes=None):
         return make_scheduler(self.scheduler, num_clients=num_clients,
@@ -98,6 +127,21 @@ class Scenario:
         return jax.random.randint(key, (num_clients,), 0,
                                   self.staleness_max + 1, jnp.int32)
 
+    def draw_compression_levels(self, round_idx,
+                                num_clients: int) -> jax.Array:
+        """(C,) int32 bandwidth levels over the repro.compression.LEVELS
+        ladder — which compressor each client's uplink can afford this
+        round. Only meaningful when ``bandwidth_heterogeneous``; the
+        engine passes None (= the run's CompressionSpec.kind) for
+        ``bandwidth="fixed"``."""
+        key = jax.random.fold_in(self.round_key(round_idx), 3)
+        if self.bandwidth == "uniform":
+            return jax.random.randint(key, (num_clients,), 0,
+                                      _NUM_LEVELS, jnp.int32)
+        logits = jnp.log(jnp.asarray(self.tier_probs, jnp.float32))
+        return jax.random.categorical(
+            key, logits, shape=(num_clients,)).astype(jnp.int32)
+
 
 SCENARIOS: Dict[str, Scenario] = {s.name: s for s in (
     Scenario("sync_iid", alpha=1.0),
@@ -107,6 +151,7 @@ SCENARIOS: Dict[str, Scenario] = {s.name: s for s in (
     Scenario("cyclic_hetero", scheduler="cyclic", speed="uniform"),
     Scenario("zipf_async", scheduler="zipf", speed="uniform",
              aggregation="async", buffer_size=8),
+    Scenario("bandwidth_tiered", bandwidth="tiered"),
 )}
 
 

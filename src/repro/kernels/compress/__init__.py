@@ -1,0 +1,8 @@
+"""Fused delta-compression kernels for the packed (C, N) flat buffer."""
+from repro.kernels.compress.compress import (LAUNCHES, dequantize_int8,
+                                             launch_count, quantize_int8,
+                                             reset_launch_count, topk_mask)
+from repro.kernels.compress import ref
+
+__all__ = ["LAUNCHES", "dequantize_int8", "launch_count", "quantize_int8",
+           "reset_launch_count", "topk_mask", "ref"]

@@ -38,7 +38,8 @@ def _state_shardings(mesh, spec, state_struct, param_sh):
     """FLState shardings: params per rules; adaptive server-state slots
     (m/v, param-shaped) reuse the param shardings; scalars replicated.
     The async scenario delta buffer (param-shaped) also reuses the param
-    shardings."""
+    shardings; the EF21 error-feedback tree ((C,)+param-shaped) shards
+    its leading cohort axis over the client mesh axes."""
     from repro.core.fed_round import FLState
 
     pstruct = jax.tree_util.tree_structure(state_struct.params)
@@ -61,8 +62,16 @@ def _state_shardings(mesh, spec, state_struct, param_sh):
         rep = NamedSharding(mesh, P())
         buf_sh = AsyncBufferState(delta=param_sh, weight=rep, count=rep,
                                   stale_sum=rep, stale_max=rep)
+    ef_sh = None
+    if getattr(state_struct, "ef", None) is not None:
+        ca, _ = spec.flat_axes(mesh)
+        ca = ca if len(ca) > 1 else (ca[0] if ca else None)
+        ef_sh = jax.tree.map(
+            lambda l: NamedSharding(mesh, P(*((ca,) + (None,) * (l.ndim - 1)))),
+            state_struct.ef)
     return FLState(params=param_sh, server_state=srv_sh,
-                   round=NamedSharding(mesh, P()), buffer=buf_sh)
+                   round=NamedSharding(mesh, P()), buffer=buf_sh,
+                   ef=ef_sh)
 
 
 def _shard_bytes(struct, shardings):
@@ -131,13 +140,20 @@ def analytic_memory(cfg, shape, spec, mesh, pstruct, param_sh, fl,
 def _compile_step(cfg, shape, mesh, spec, fl, *, unroll, remat,
                   use_pallas=False, seq_shard=False, quant_kv=False,
                   softmax_bf16=False, cache_seq_shard=False,
-                  flat_fed=None, flat_sharded=False, scenario=None):
+                  flat_fed=None, flat_sharded=False, scenario=None,
+                  compression=None, clients=None):
     """Lower + compile one program variant. Returns (compiled, t_lower,
     t_compile, analytic). ``flat_sharded`` (flat_fed only) threads the
     mesh + FederationSpec into the round so the packed (C, N) buffer
     stays sharded per ``spec.flat_spec(mesh)``. ``scenario`` (preset
     name or Scenario) adds heterogeneous-K lane masks / async buffered
-    aggregation to the round."""
+    aggregation to the round. ``compression`` (kind name or
+    CompressionSpec) compresses the client deltas on the flat engine
+    (repro.compression). ``clients`` overrides the cohort size C
+    (default ``spec.clients_on(mesh)`` — one client per client-axis
+    coordinate); a multiple of it stacks several clients per shard,
+    which the compressed-boundary HLO assertion needs to tell a leaked
+    delta slab from the aggregated mean."""
     import repro.models.attention as _att
     from repro.models.common import logical_rules, unroll_scans
     _att.SOFTMAX_BF16 = softmax_bf16
@@ -148,13 +164,14 @@ def _compile_step(cfg, shape, mesh, spec, fl, *, unroll, remat,
     t0 = time.time()
     with mesh, unroll_scans(unroll), logical_rules(rules):
         if shape.kind == "train":
-            step, sopt, scn = make_train_step(
+            step, sopt, scn, comp = make_train_step(
                 model, fl, use_pallas=use_pallas, remat=remat, flat=flat_fed,
                 mesh=mesh if (flat_fed and flat_sharded) else None,
                 federation=spec if (flat_fed and flat_sharded) else None,
-                scenario=scenario)
-            state_struct = abstract_fl_state(model, sopt, scn)
-            batch = train_specs(model, shape, fl, spec.clients_on(mesh))
+                scenario=scenario, compression=compression)
+            C = clients or spec.clients_on(mesh)
+            state_struct = abstract_fl_state(model, sopt, scn, comp, C)
+            batch = train_specs(model, shape, fl, C)
             param_sh = make_param_shardings(spec, mesh, state_struct.params)
             state_sh = _state_shardings(mesh, spec, state_struct, param_sh)
             batch_sh = batch_shardings(spec, mesh, batch)
@@ -291,15 +308,18 @@ def lower_one(arch: str, shape_id: str, multi_pod: bool, *,
 
 
 def scenario_smoke(verbose: bool = True):
-    """CI scenario leg: compile the flat_fed_hetero / flat_fed_async
-    rounds of a reduced config on an 8-virtual-device (4, 2) host mesh
-    and assert the packed (C, N) buffer stays sharded under both
-    scenario variants (the production-mesh versions run via
-    ``launch/perf.py --variants flat_fed_hetero,flat_fed_async``)."""
+    """CI scenario leg: compile the flat_fed_hetero / flat_fed_async /
+    flat_fed_compressed rounds of a reduced config on an 8-virtual-device
+    (4, 2) host mesh and assert the packed (C, N) buffer stays sharded
+    under every scenario variant — the compressed variant additionally
+    asserts no full-precision client delta crosses the client shard
+    boundary (the production-mesh versions run via ``launch/perf.py
+    --variants flat_fed_hetero,flat_fed_async,flat_fed_compressed``)."""
     from repro.configs.base import ShapeConfig
     from repro.core import flat as flatlib
     from repro.models.model import build_model
-    from repro.sharding.hlo import assert_flat_buffer_sharded
+    from repro.sharding.hlo import (assert_flat_buffer_sharded,
+                                    assert_no_fullprec_delta_collective)
     from repro.sharding.spec import cross_device
 
     cfg = get_config("tinyllama-1.1b").reduced(num_layers=2, d_model=256)
@@ -310,20 +330,39 @@ def scenario_smoke(verbose: bool = True):
     model = build_model(cfg, jnp.bfloat16)
     pstruct = jax.eval_shape(model.init, jax.random.key(0))
     layout = flatlib.layout_of(pstruct, shards=spec.flat_shards(mesh))
-    C = spec.clients_on(mesh)
-    for variant, scn in (("flat_fed_hetero", "dirichlet_stragglers"),
-                         ("flat_fed_async", "zipf_async")):
+    from repro.compression import CompressionSpec
+    for variant, scn, comp in (
+            ("flat_fed_hetero", "dirichlet_stragglers", None),
+            ("flat_fed_async", "zipf_async", None),
+            # error_feedback=True allocates FLState.ef, so the compiled
+            # program (and both HLO assertions) covers the EF sharding
+            ("flat_fed_compressed", "bandwidth_tiered",
+             CompressionSpec(kind="int8", error_feedback=True))):
+        # the compressed variant stacks 2 clients per client shard so
+        # the boundary assertion can tell a leaked full-precision delta
+        # slab (C_loc, N_loc) from the legitimate (N_loc,) client mean
+        C = spec.clients_on(mesh) * (2 if comp is not None else 1)
         t0 = time.time()
         compiled, *_ = _compile_step(cfg, shape, mesh, spec, fl,
                                      unroll=False, remat=False,
                                      flat_fed=True, flat_sharded=True,
-                                     scenario=scn)
+                                     scenario=scn, compression=comp,
+                                     clients=C)
         rep = assert_flat_buffer_sharded(compiled, C, layout.padded_size)
+        extra = ""
+        if comp is not None:
+            brep = assert_no_fullprec_delta_collective(
+                compiled, C, layout.padded_size, mesh=mesh,
+                federation=spec)
+            extra = (f", no full-precision delta over the client "
+                     f"boundary ({brep['collectives']} collectives "
+                     f"checked)")
         if verbose:
             print(f"[scenario-smoke] {variant} ({scn}): compiled in "
                   f"{time.time() - t0:.1f}s, ({C}, {layout.padded_size}) "
                   f"flat buffer stays sharded "
-                  f"(gather/copy={rep['gather_or_copy']})", flush=True)
+                  f"(gather/copy={rep['gather_or_copy']}){extra}",
+                  flush=True)
     print("scenario smoke passed")
 
 
@@ -341,9 +380,10 @@ def main():
     ap.add_argument("--fed-kind", default=None)
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--scenario-smoke", action="store_true",
-                    help="compile flat_fed_hetero + flat_fed_async on an "
-                         "8-virtual-device mesh and check the sharded-"
-                         "buffer HLO assertion (CI scenario leg)")
+                    help="compile flat_fed_hetero + flat_fed_async + "
+                         "flat_fed_compressed on an 8-virtual-device mesh "
+                         "and check the sharded-buffer + compressed-"
+                         "boundary HLO assertions (CI scenario leg)")
     args = ap.parse_args()
 
     if args.scenario_smoke:

@@ -32,6 +32,16 @@ Variants:
                sharded flat engine under the `zipf_async` scenario:
                FedBuff-style staleness-weighted delta buffer in
                FLState.buffer; HLO assertion as above
+  flat_fed_compressed
+               sharded flat engine with int8 delta compression + EF21
+               error feedback under the `bandwidth_tiered` scenario
+               (repro.compression): client deltas are compressed
+               chunk-locally BEFORE the client-mean psum. Reports the
+               analytic wire-bytes / compression-ratio telemetry and
+               runs BOTH HLO assertions (sharded buffer + no
+               full-precision delta across the client boundary, the
+               latter skipped with a note when the production spec
+               leaves < 2 clients per client shard)
 """
 import argparse
 import json
@@ -40,6 +50,7 @@ import time
 import jax.numpy as jnp
 
 from repro import roofline
+from repro.compression import CompressionSpec
 from repro.configs import FLConfig, INPUT_SHAPES, get_config
 from repro.launch.dryrun import _at_depth, _calib_depths, _compile_step
 from repro.launch.mesh import make_production_mesh
@@ -73,18 +84,34 @@ VARIANT_KNOBS = {
                         "scenario": "dirichlet_stragglers"},
     "flat_fed_async": {"flat_fed": True, "flat_sharded": True,
                        "scenario": "zipf_async"},
+    # delta compression (repro.compression): int8 + EF21 client deltas
+    # under the bandwidth_tiered scenario, compressed shard-locally
+    # before the client-mean psum; wire-bytes/compression-ratio
+    # telemetry lands in the perf artifact next to the roofline terms.
+    # error_feedback=True matters: it allocates FLState.ef, so the
+    # compiled program (and both HLO assertions) covers the EF sharding
+    "flat_fed_compressed": {"flat_fed": True, "flat_sharded": True,
+                            "scenario": "bandwidth_tiered",
+                            "compression": CompressionSpec(
+                                kind="int8", error_feedback=True)},
 }
 
 
-def _check_flat_sharded(compiled, cfg, mesh, spec, variant):
+def _check_flat_sharded(compiled, cfg, mesh, spec, variant,
+                        compressed=False):
     """flat_fed_sharded copy-count assertion: the compiled module must
-    never rematerialize the full packed (C, N) buffer on one device."""
+    never rematerialize the full packed (C, N) buffer on one device.
+    ``compressed`` additionally asserts no full-precision client delta
+    crosses the client shard boundary (skipped with a note when the
+    spec leaves < 2 clients per client shard — indistinguishable from
+    the aggregated mean)."""
     import jax
     import jax.numpy as jnp
 
     from repro.core import flat as flatlib
     from repro.models.model import build_model
-    from repro.sharding.hlo import assert_flat_buffer_sharded
+    from repro.sharding.hlo import (assert_flat_buffer_sharded,
+                                    assert_no_fullprec_delta_collective)
 
     model = build_model(cfg, jnp.bfloat16)
     pstruct = jax.eval_shape(model.init, jax.random.key(0))
@@ -94,6 +121,16 @@ def _check_flat_sharded(compiled, cfg, mesh, spec, variant):
     print(f"[{variant}] ({C}, {layout.padded_size}) flat buffer stays "
           f"sharded: 0 full-shape HLO hits "
           f"(gather/copy={rep['gather_or_copy']})", flush=True)
+    if compressed:
+        try:
+            brep = assert_no_fullprec_delta_collective(
+                compiled, C, layout.padded_size, mesh=mesh,
+                federation=spec)
+            print(f"[{variant}] no full-precision delta crosses the "
+                  f"client boundary ({brep['collectives']} collectives "
+                  f"checked)", flush=True)
+        except ValueError as e:
+            print(f"[{variant}] boundary check skipped: {e}", flush=True)
 
 
 def measure(arch: str, shape_id: str, variant: str, *, local_steps=2):
@@ -121,7 +158,9 @@ def measure(arch: str, shape_id: str, variant: str, *, local_steps=2):
             c, *_ = _compile_step(cfg_L, shape, mesh, spec, fl,
                                   unroll=True, remat=False, **knobs)
             if knobs.get("flat_sharded"):
-                _check_flat_sharded(c, cfg_L, mesh, spec, variant)
+                _check_flat_sharded(c, cfg_L, mesh, spec, variant,
+                                    compressed=bool(
+                                        knobs.get("compression")))
             rls.append(roofline.analyze(c, mesh.size))
         rl = roofline.extrapolate(rls[0], rls[1], L1, L2, cfg.num_layers)
     if cap is not None:
@@ -129,6 +168,31 @@ def measure(arch: str, shape_id: str, variant: str, *, local_steps=2):
         moe.CAPACITY_FACTOR = 1.25
     out = rl.summary()
     out["wall_s"] = round(time.time() - t0, 1)
+    if knobs.get("compression"):
+        # analytic wire telemetry: per-round client->server payload for
+        # the FULL-depth config at this variant's compression kind
+        # (bandwidth-tiered rounds mix levels per draw; this is the
+        # fixed-kind figure the ratio columns are normalized against)
+        import jax
+        import jax.numpy as jnp
+        from repro.compression import get_compression
+        from repro.core import flat as flatlib
+        from repro.models.model import build_model
+        comp = get_compression(knobs["compression"])
+        pstruct = jax.eval_shape(build_model(cfg, jnp.bfloat16).init,
+                                 jax.random.key(0))
+        layout = flatlib.layout_of(pstruct, shards=spec.flat_shards(mesh))
+        C = spec.clients_on(mesh)
+        table = comp.level_wire_bytes(layout.size)
+        wire = float(table[comp.level]) * C
+        out["wire"] = {"kind": comp.kind, "clients": C,
+                       "wire_bytes_round": wire,
+                       "uncompressed_bytes_round": float(table[0]) * C,
+                       "comp_ratio": float(table[0]) / float(
+                           table[comp.level])}
+        print(f"[{variant}] wire: {wire/1e9:.2f} GB/round vs "
+              f"{float(table[0]) * C/1e9:.2f} GB uncompressed "
+              f"(ratio {out['wire']['comp_ratio']:.2f}x)", flush=True)
     return out
 
 

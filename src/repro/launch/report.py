@@ -113,7 +113,14 @@ def scenario_summary(name: str, ids_per_round, num_clients: int,
                          ("k_eff_mean", np.mean, "k_eff_mean"),
                          ("k_eff_min", np.min, "k_eff_min"),
                          ("k_eff_max", np.max, "k_eff_max"),
-                         ("flushed", np.mean, "flush_rate")):
+                         ("flushed", np.mean, "flush_rate"),
+                         # delta-compression wire telemetry
+                         # (repro.compression): per-round cohort payload
+                         # and its ratio vs full-precision f32 deltas
+                         ("wire_bytes", np.mean, "wire_bytes_round"),
+                         ("wire_bytes", np.sum, "wire_bytes_total"),
+                         ("comp_ratio", np.mean, "comp_ratio"),
+                         ("comp_level_mean", np.mean, "comp_level_mean")):
         v = agg(key, fn)
         if v is not None:
             out[as_] = float(v)
@@ -127,8 +134,9 @@ def scenario_table(rows):
     if not rows:
         return "(no scenario artifacts)"
     out = ["| scenario | rounds | clients seen | top-1/top-5 cohort share "
-           "| stale mean/max | K_eff mean (min..max) | flush rate |",
-           "|---|---|---|---|---|---|---|"]
+           "| stale mean/max | K_eff mean (min..max) | flush rate "
+           "| wire/round | comp ratio |",
+           "|---|---|---|---|---|---|---|---|---|"]
     for r in rows:
         seen = r.get("clients_seen", "-")
         share = (f"{r['cohort_top1_share']:.2f}/{r['cohort_top5_share']:.2f}"
@@ -139,8 +147,11 @@ def scenario_table(rows):
                 f"({r['k_eff_min']:.0f}..{r['k_eff_max']:.0f})"
                 if "k_eff_mean" in r else "-")
         flush = (f"{r['flush_rate']:.2f}" if "flush_rate" in r else "-")
+        wire = (fmt_b(r["wire_bytes_round"])
+                if "wire_bytes_round" in r else "-")
+        ratio = (f"{r['comp_ratio']:.2f}x" if "comp_ratio" in r else "-")
         out.append(f"| {r['scenario']} | {r['rounds']} | {seen} | {share} "
-                   f"| {stale} | {keff} | {flush} |")
+                   f"| {stale} | {keff} | {flush} | {wire} | {ratio} |")
     return "\n".join(out)
 
 

@@ -16,7 +16,7 @@ from repro.models.model import Model
 def make_train_step(model: Model, fl: FLConfig, *, num_rounds: int = 1000,
                     use_pallas: bool = False, remat: bool = False,
                     flat: Optional[bool] = None, mesh=None,
-                    federation=None, scenario=None):
+                    federation=None, scenario=None, compression=None):
     """One federated round over the (C, K, b, ...) batch layout.
 
     ``flat`` switches in the flat-parameter Δ-SGD engine (defaults to
@@ -28,9 +28,13 @@ def make_train_step(model: Model, fl: FLConfig, *, num_rounds: int = 1000,
     ``fl.scenario``) adds heterogeneous step counts and/or async
     buffered aggregation; async scenarios auto-enable the flat engine
     (the delta buffer is one reduction over the packed client axis).
+    ``compression`` (a repro.compression.CompressionSpec or kind name;
+    defaults to ``fl.compression_spec``) compresses the client deltas on
+    the flat engine and auto-enables it when active.
 
-    Returns (train_step, sopt, scenario) — the resolved scenario so the
-    caller can allocate a matching ``init_fl_state``.
+    Returns (train_step, sopt, scenario, compression) — the resolved
+    scenario/compression so the caller can allocate a matching
+    ``init_fl_state``.
     """
     copt = get_client_opt(fl.client_opt, fl, use_pallas=use_pallas)
     sopt = get_server_opt(fl.server_opt)
@@ -39,9 +43,14 @@ def make_train_step(model: Model, fl: FLConfig, *, num_rounds: int = 1000,
     if scenario is not None and not hasattr(scenario, "is_async"):
         from repro.federation import get_scenario
         scenario = get_scenario(scenario)
+    from repro.compression import get_compression
+    compression = get_compression(compression if compression is not None
+                                  else fl.compression_spec)
     if flat is None:
         flat = fl.flat_engine
     if scenario is not None and scenario.is_async:
+        flat = True
+    if compression.active(scenario):
         flat = True
     flat_mode = False
     if flat:
@@ -60,13 +69,14 @@ def make_train_step(model: Model, fl: FLConfig, *, num_rounds: int = 1000,
                              weighted=fl.weighted_agg, flat=flat_mode,
                              mesh=mesh, federation=federation,
                              scenario=scenario,
-                             num_clients=fl.num_clients)
+                             num_clients=fl.num_clients,
+                             compression=compression)
 
     def train_step(state, client_batches):
         new_state, metrics, _ = round_fn(state, client_batches)
         return new_state, metrics
 
-    return train_step, sopt, scenario
+    return train_step, sopt, scenario, compression
 
 
 def make_prefill_step(model: Model, *, window: Optional[int] = None,
@@ -90,9 +100,13 @@ def make_serve_step(model: Model, *, window: Optional[int] = None,
     return serve_step
 
 
-def abstract_fl_state(model: Model, sopt, scenario=None):
+def abstract_fl_state(model: Model, sopt, scenario=None, compression=None,
+                      cohort=None):
     """FLState ShapeDtypeStructs without allocating params (incl. the
-    async delta buffer when ``scenario`` is an async Scenario)."""
+    async delta buffer when ``scenario`` is an async Scenario, and the
+    EF21 error-feedback tree when ``compression`` carries error
+    feedback — ``cohort`` sizes its leading axis)."""
     pstruct = jax.eval_shape(model.init, jax.random.key(0))
-    return jax.eval_shape(lambda p: init_fl_state(p, sopt, scenario),
-                          pstruct)
+    return jax.eval_shape(
+        lambda p: init_fl_state(p, sopt, scenario, compression, cohort),
+        pstruct)

@@ -21,6 +21,13 @@ buffered aggregation. Async scenarios require (and auto-enable) the
 flat Δ-SGD engine. The driver prints a per-run scenario report (cohort
 histogram, staleness, effective-K) and appends it to the ``--out``
 artifact.
+
+``--compression`` (+ ``--k-frac``, ``--error-feedback``) compresses the
+client->server deltas on the flat engine (repro.compression: int8
+per-chunk quantization or magnitude top-k, optional EF21 error
+feedback); the round log and the report gain wire-bytes /
+compression-ratio telemetry. Combine with ``--scenario
+bandwidth_tiered`` to draw per-client compression levels each round.
 """
 from __future__ import annotations
 
@@ -48,9 +55,23 @@ def _resolve_scenario(args):
     return get_scenario(args.scenario, seed=args.seed)
 
 
+def _resolve_compression(args):
+    """CompressionSpec from the --compression/--k-frac/--error-feedback
+    flags (repro.compression); inert kind="none" specs leave the round
+    engines bit-exact."""
+    from repro.compression import CompressionSpec
+    return CompressionSpec(kind=args.compression, k_frac=args.k_frac,
+                           error_feedback=args.error_feedback)
+
+
 class _ScenarioStats:
     """Per-run accumulator for the scenario report (launch/report.py):
-    cohort ids per round + the scalar scenario metrics the round emits."""
+    cohort ids per round + the scalar scenario/compression metrics the
+    round emits (wire bytes / compression ratio included)."""
+
+    KEYS = ("stale_mean", "stale_max", "k_eff_mean", "k_eff_min",
+            "k_eff_max", "flushed", "buffer_fill", "wire_bytes",
+            "comp_ratio", "comp_level_mean")
 
     def __init__(self, scenario, num_clients):
         self.scenario, self.num_clients = scenario, num_clients
@@ -62,13 +83,12 @@ class _ScenarioStats:
         elif "cohort_ids" in metrics:
             self.ids.append(np.asarray(metrics["cohort_ids"]))
         self.metrics.append(
-            {k: float(metrics[k]) for k in
-             ("stale_mean", "stale_max", "k_eff_mean", "k_eff_min",
-              "k_eff_max", "flushed", "buffer_fill") if k in metrics})
+            {k: float(metrics[k]) for k in self.KEYS if k in metrics})
 
     def summary(self):
         from repro.launch.report import scenario_summary
-        return scenario_summary(self.scenario.name, self.ids,
+        name = self.scenario.name if self.scenario else "none"
+        return scenario_summary(name, self.ids,
                                 self.num_clients, self.metrics)
 
     def report(self, out_path=None, extra=None):
@@ -99,16 +119,22 @@ def train_lm(args):
     sopt = get_server_opt(fl.server_opt)
     loss_fn = make_loss(lambda p, b: model.loss(p, b),
                         fedprox_mu=fl.fedprox_mu)
-    flat = "xla" if (scn is not None and scn.is_async) else False
+    comp = _resolve_compression(args)
+    comp_active = comp.active(scn)
+    flat = ("xla" if ((scn is not None and scn.is_async) or comp_active)
+            else False)
     round_fn = jax.jit(make_fl_round(loss_fn, copt, sopt,
                                      num_rounds=args.rounds, flat=flat,
                                      scenario=scn,
-                                     num_clients=args.num_clients))
+                                     num_clients=args.num_clients,
+                                     compression=comp))
     params = model.init(jax.random.key(args.seed))
-    state = init_fl_state(params, sopt, scn)
+    state = init_fl_state(params, sopt, scn, compression=comp,
+                          cohort=args.clients_per_round)
     state = _maybe_resume(args, state)
     rng = np.random.default_rng(args.seed)
-    stats = _ScenarioStats(scn, args.num_clients) if scn else None
+    stats = (_ScenarioStats(scn, args.num_clients)
+             if (scn or comp_active) else None)
 
     extras = {}
     if cfg.encoder_layers:
@@ -126,27 +152,41 @@ def train_lm(args):
         state, metrics, _ = round_fn(state, batches)
         if stats:
             stats.update(None, metrics)
-        _maybe_ckpt(args, state, t)
+        _maybe_ckpt(args, state, t, final=(t == args.rounds - 1))
         if t % max(1, args.rounds // 10) == 0 or t == args.rounds - 1:
+            wire = (f" wire {float(metrics['wire_bytes'])/1e6:.2f}MB "
+                    f"(x{float(metrics['comp_ratio']):.2f})"
+                    if "wire_bytes" in metrics else "")
             print(f"round {t:4d} loss {float(metrics['loss']):.4f} "
-                  f"eta {float(metrics['eta_mean']):.4f} "
+                  f"eta {float(metrics['eta_mean']):.4f}{wire} "
                   f"({time.time() - t0:.0f}s)", flush=True)
     if stats:
         stats.report(args.out)
     return state
 
 
-def _maybe_ckpt(args, state, t):
-    if args.ckpt_dir and (t % args.ckpt_every == 0):
+def _maybe_ckpt(args, state, t, final=False):
+    """Periodic checkpoint, plus ALWAYS the final round: with
+    ``T % ckpt_every != 0`` the last periodic save would otherwise
+    predate round T and a --resume would silently redo (and a reader
+    silently lose) up to ckpt_every-1 rounds.
+
+    Saves are keyed on ``state.round`` (completed rounds), NOT the loop
+    index: after a --resume the loop restarts at t=0 while the round
+    counter continues, and loop-index steps would sort BELOW the
+    pre-resume checkpoints — save()'s keep-newest GC would delete the
+    new saves and latest_step would restore stale pre-resume state."""
+    if args.ckpt_dir and (t % args.ckpt_every == 0 or final):
         from repro.checkpoint import save
-        save(args.ckpt_dir, state, step=t)
+        save(args.ckpt_dir, state, step=int(state.round))
 
 
 def _maybe_resume(args, state):
     from repro.checkpoint import latest_step, restore
     if args.ckpt_dir and args.resume and latest_step(args.ckpt_dir) is not None:
         state, step = restore(args.ckpt_dir, like=state)
-        print(f"resumed from checkpoint step {step}")
+        print(f"resumed from checkpoint step {step} "
+              f"(round {int(state.round)})")
     return state
 
 
@@ -170,14 +210,20 @@ def train_paper_task(args):
         lambda p, b: (softmax_ce(logits_fn(p, b["x"]), b["y"]), {}),
         fedprox_mu=fl.fedprox_mu)
     K = fed.epoch_steps(args.batch)
-    flat = "xla" if (scn is not None and scn.is_async) else False
+    comp = _resolve_compression(args)
+    comp_active = comp.active(scn)
+    flat = ("xla" if ((scn is not None and scn.is_async) or comp_active)
+            else False)
     round_fn = jax.jit(make_fl_round(
         loss_fn, copt, sopt, num_rounds=args.rounds, flat=flat,
         scenario=scn, num_clients=args.num_clients,
-        client_sizes=fed.client_sizes() if scn else None))
-    state = init_fl_state(init_fn(jax.random.key(args.seed)), sopt, scn)
+        client_sizes=fed.client_sizes() if scn else None,
+        compression=comp))
+    state = init_fl_state(init_fn(jax.random.key(args.seed)), sopt, scn,
+                          compression=comp, cohort=fl.clients_per_round)
     state = _maybe_resume(args, state)
-    stats = _ScenarioStats(scn, args.num_clients) if scn else None
+    stats = (_ScenarioStats(scn, args.num_clients)
+             if (scn or comp_active) else None)
     t0 = time.time()
     for t in range(args.rounds):
         # key the host-side cohort draw on the ROUND COUNTER IN THE
@@ -193,7 +239,7 @@ def train_paper_task(args):
         state, metrics, _ = round_fn(state, batches)
         if stats:
             stats.update(ids, metrics)
-        _maybe_ckpt(args, state, t)
+        _maybe_ckpt(args, state, t, final=(t == args.rounds - 1))
         if t % max(1, args.rounds // 10) == 0 or t == args.rounds - 1:
             xt, yt = fed.test_batch(2000)
             acc = accuracy(logits_fn(state.params, jnp.asarray(xt)),
@@ -235,6 +281,15 @@ def main():
                          "dirichlet_stragglers, zipf_async, ...)")
     ap.add_argument("--out", default=None,
                     help="write the scenario report JSON here")
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "int8", "topk"],
+                    help="client->server delta compression on the flat "
+                         "engine (repro.compression); auto-enables it")
+    ap.add_argument("--k-frac", type=float, default=0.25,
+                    help="topk: fraction of each 128-lane chunk kept")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="EF21 error feedback (per-cohort-slot state in "
+                         "FLState.ef)")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--fedprox-mu", type=float, default=0.0)
     ap.add_argument("--use-pallas", action="store_true")

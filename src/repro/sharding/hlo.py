@@ -47,3 +47,117 @@ def assert_flat_buffer_sharded(compiled, C: int, N: int) -> Dict:
         f"packed ({C}, {N}) flat buffer rematerialized in compiled HLO: "
         f"{rep}")
     return rep
+
+
+# ---------------------------------------------------------------------------
+# compressed-round boundary check (repro.compression): no full-precision
+# client delta may cross the CLIENT shard boundary (the simulated wire)
+# ---------------------------------------------------------------------------
+# the opcode of an HLO instruction is the token directly before its "(";
+# operand references (%all-reduce.5) are %-prefixed and never match
+_COLLECTIVE_OP_RE = re.compile(
+    r"(?<![%.\w-])(all-reduce|all-gather|all-to-all|collective-permute|"
+    r"reduce-scatter)(?:-start|-done)?\(")
+_F32_SHAPE_RE = re.compile(r"\bf32\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"(?:replica_groups|source_target_pairs)="
+                        r"\{((?:\{[\d,]*\},?)*)\}")
+_GROUP_RE = re.compile(r"\{([\d,]*)\}")
+
+
+def _elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _parse_groups(line: str):
+    """Device groups of a collective line, or None if unparseable (e.g.
+    the iota replica-group format) — callers treat None as spanning.
+    ``replica_groups={}`` (= one group of ALL devices) also returns
+    None: it spans every client shard."""
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return None
+    groups = [tuple(int(d) for d in g.group(1).split(",") if d)
+              for g in _GROUP_RE.finditer(m.group(1))]
+    return groups or None
+
+
+def _client_coords(mesh, client_axes) -> Dict:
+    """device id -> its coordinates along the CLIENT mesh axes."""
+    import numpy as np
+    ids = np.vectorize(lambda d: d.id)(mesh.devices)
+    axis_idx = [mesh.axis_names.index(a) for a in client_axes]
+    return {int(ids[idx]): tuple(idx[i] for i in axis_idx)
+            for idx in np.ndindex(ids.shape)}
+
+
+def fullprec_collective_report(hlo_text: str, *, max_elems: int,
+                               client_coord_of: Dict = None) -> Dict:
+    """Collectives that move >= ``max_elems`` f32 elements ACROSS client
+    shards.
+
+    Post-SPMD HLO shapes are per-device, so a collective that ships a
+    client-indexed full-precision delta slab over the client axes shows
+    up as an all-reduce/all-gather/permute of >= (C_local, N_local) f32
+    elements whose replica groups mix devices with different client
+    coordinates. Collectives whose groups stay WITHIN one client
+    coordinate (``client_coord_of``) are intra-client reshards of the
+    flat dim (the pack/unpack seam), not wire traffic, and are exempt;
+    unparseable groups are conservatively treated as client-crossing.
+    Returns {"collectives": #collective instructions, "fullprec":
+    #violations, "sample": first few}.
+    """
+    lines = [ln for ln in hlo_text.splitlines()
+             if _COLLECTIVE_OP_RE.search(ln)]
+    bad = []
+    for ln in lines:
+        if not any(_elems(m.group(1)) >= max_elems
+                   for m in _F32_SHAPE_RE.finditer(ln)):
+            continue
+        if client_coord_of is not None:
+            groups = _parse_groups(ln)
+            if groups is not None and all(
+                    len({client_coord_of.get(d) for d in g}) <= 1
+                    for g in groups):
+                continue    # stays within one client coordinate
+        bad.append(ln)
+    return {"collectives": len(lines), "fullprec": len(bad),
+            "sample": [ln.strip()[:160] for ln in bad[:4]]}
+
+
+def assert_no_fullprec_delta_collective(compiled, C: int, N: int, *,
+                                        mesh, federation) -> Dict:
+    """Assert the compiled compressed sharded round ships no
+    full-precision (C, N) client delta across the client shard boundary
+    — the machine-checkable form of "compression happens before the
+    client-mean psum".
+
+    In a correctly compressed round the largest legitimate f32 payload
+    crossing the client axes is the (N/n_shards,) aggregated client
+    mean (the compressors are chunk-local and run strictly before that
+    psum). A client-crossing collective carrying >=
+    (C_local, N/n_shards) f32 elements therefore means an uncompressed
+    per-client delta slab went over the simulated wire. Needs
+    C_local >= 2 to tell the two apart (raises ValueError otherwise —
+    e.g. one-client-per-shard production specs).
+    """
+    import numpy as np
+    client_axes, _ = federation.flat_axes(mesh)
+    c_shards = int(np.prod([mesh.shape[a] for a in client_axes])) or 1
+    n_shards = federation.flat_shards(mesh)
+    c_loc, n_loc = C // max(1, c_shards), N // max(1, n_shards)
+    if c_loc < 2:
+        raise ValueError(
+            "assert_no_fullprec_delta_collective needs >= 2 clients per "
+            f"client shard to separate a delta slab from the aggregated "
+            f"mean (C={C}, client shards={c_shards})")
+    rep = fullprec_collective_report(
+        compiled.as_text(), max_elems=c_loc * n_loc,
+        client_coord_of=_client_coords(mesh, client_axes))
+    assert rep["fullprec"] == 0, (
+        f"full-precision client delta (>= ({c_loc}, {n_loc}) f32) "
+        f"crossed the client shard boundary: {rep}")
+    return rep

@@ -1,11 +1,22 @@
-"""Checkpoint subsystem: save/restore round-trips FLState exactly."""
+"""Checkpoint subsystem: save/restore round-trips FLState exactly —
+including the PR-3 async buffer slot (FLState.buffer) and the
+compression subsystem's EF21 state (FLState.ef) — and a --resume
+continues training bit-identically to an uninterrupted run."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.checkpoint import latest_step, restore, save
-from repro.core import get_server_opt, init_fl_state
+from repro.core import (get_client_opt, get_server_opt, init_fl_state,
+                        make_fl_round, make_loss)
+
+
+def _assert_trees_equal(a_tree, b_tree):
+    for a, b in zip(jax.tree_util.tree_leaves(a_tree),
+                    jax.tree_util.tree_leaves(b_tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
 
 
 def test_roundtrip_flstate(tmp_path, rng):
@@ -13,13 +24,12 @@ def test_roundtrip_flstate(tmp_path, rng):
               "b": {"x": jnp.asarray(rng.normal(size=(4,)), jnp.bfloat16)}}
     sopt = get_server_opt("fedadam")
     state = init_fl_state(params, sopt)
+    assert state.buffer is None and state.ef is None
     save(str(tmp_path), state, step=7)
     restored, step = restore(str(tmp_path), like=state)
     assert step == 7
-    for a, b in zip(jax.tree_util.tree_leaves(state),
-                    jax.tree_util.tree_leaves(restored)):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-        assert a.dtype == b.dtype
+    assert restored.buffer is None and restored.ef is None
+    _assert_trees_equal(state, restored)
 
 
 def test_keep_and_latest(tmp_path):
@@ -38,3 +48,97 @@ def test_shape_mismatch_rejected(tmp_path):
     save(str(tmp_path), {"w": jnp.zeros((3,))}, step=0)
     with pytest.raises(ValueError):
         restore(str(tmp_path), like={"w": jnp.zeros((4,))})
+
+
+# ------------------------------------------------- FLState.buffer / .ef
+def _async_run(rng, rounds, tmp_path=None, resume_after=None,
+               buffer_size=8):
+    """Flat async+EF quad run; optionally checkpoint after round
+    ``resume_after`` and restore into a FRESH state before continuing —
+    must be bit-identical to the uninterrupted run."""
+    from repro.compression import CompressionSpec
+    from repro.federation import get_scenario
+    D, C, K = 40, 4, 2
+
+    def quad(params, batch):
+        r = batch["A"] @ params["x"] - batch["b"]
+        return 0.5 * jnp.mean(r * r), {}
+
+    batches = {"A": jnp.asarray(rng.normal(size=(C, K, 8, D)), jnp.float32),
+               "b": jnp.asarray(rng.normal(size=(C, K, 8)), jnp.float32)}
+    params = {"x": jnp.asarray(rng.normal(size=D), jnp.float32)}
+    scn = get_scenario("zipf_async", buffer_size=buffer_size)
+    spec = CompressionSpec(kind="int8", error_feedback=True)
+    sopt = get_server_opt("fedavg")
+    rnd = jax.jit(make_fl_round(make_loss(quad), get_client_opt("delta_sgd"),
+                                sopt, num_rounds=10, flat="xla",
+                                scenario=scn, compression=spec))
+    st = init_fl_state(params, sopt, scn, compression=spec, cohort=C)
+    for t in range(rounds):
+        st, _, _ = rnd(st, batches)
+        if resume_after is not None and t == resume_after:
+            save(str(tmp_path), st, step=t)
+            fresh = init_fl_state(params, sopt, scn, compression=spec,
+                                  cohort=C)
+            st, step = restore(str(tmp_path), like=fresh)
+            assert step == t
+    return st
+
+
+def test_roundtrip_flstate_with_buffer_and_ef(tmp_path, rng):
+    """Satellite acceptance: FLState with an ALLOCATED async buffer and
+    EF21 error-feedback state (both non-zero after real rounds)
+    round-trips exactly, dtypes included."""
+    # M=9 > 2 rounds × 4 clients: the buffer is PART-FULL at save time
+    state = _async_run(rng, rounds=2, buffer_size=9)
+    assert int(state.buffer.count) == 8
+    assert float(jnp.max(jnp.abs(state.buffer.delta["x"]))) > 0.0
+    assert float(jnp.max(jnp.abs(state.ef["x"]))) > 0.0
+    assert state.ef["x"].dtype == jnp.float32
+    save(str(tmp_path), state, step=2)
+    restored, step = restore(str(tmp_path), like=state)
+    assert step == 2
+    _assert_trees_equal(state, restored)
+    # the template's STRUCTURE gates restore: a buffer-less template
+    # must be rejected, not silently mis-mapped
+    from repro.core import get_server_opt as _gso
+    plain = init_fl_state({"x": jnp.zeros((40,), jnp.float32)},
+                          _gso("fedavg"))
+    with pytest.raises(ValueError):
+        restore(str(tmp_path), like=plain)
+
+
+def test_resume_parity_with_buffer_and_ef(tmp_path, rng):
+    """Save after round 1, restore into a fresh state, continue — equals
+    the uninterrupted run bit for bit (round counter, part-full buffer,
+    EF tree and params all carried by the checkpoint)."""
+    rng2 = np.random.default_rng(0)
+    straight = _async_run(rng, rounds=4)
+    resumed = _async_run(rng2, rounds=4, tmp_path=tmp_path, resume_after=1)
+    assert int(straight.round) == int(resumed.round) == 4
+    _assert_trees_equal(straight, resumed)
+
+
+def test_final_round_always_checkpointed(tmp_path):
+    """Satellite acceptance (launch/train._maybe_ckpt): with
+    T % ckpt_every != 0 the last round must still be saved, and saves
+    are keyed on state.round so post-resume checkpoints sort ABOVE the
+    pre-resume ones (keep-newest GC must not eat them)."""
+    import argparse
+
+    from repro.core.fed_round import FLState
+    from repro.launch.train import _maybe_ckpt
+
+    def st(completed_rounds):
+        return FLState({"w": jnp.zeros((2,))}, {},
+                       jnp.asarray(completed_rounds, jnp.int32))
+
+    args = argparse.Namespace(ckpt_dir=str(tmp_path), ckpt_every=20)
+    T = 7                                     # t % 20 != 0 for t in 1..6
+    for t in range(T):
+        _maybe_ckpt(args, st(t + 1), t, final=(t == T - 1))
+    assert latest_step(str(tmp_path)) == T
+    # resumed run: loop restarts at t=0 but round continues at T — the
+    # new checkpoints must be numbered past the pre-resume ones
+    _maybe_ckpt(args, st(T + 1), 0)
+    assert latest_step(str(tmp_path)) == T + 1
