@@ -24,6 +24,10 @@ derived = final test accuracy unless stated).
              bandwidth_tiered per-client-level scenario, and
              interpret-mode µs/call + max-err rows for the
              quantize/dequantize/top-k kernels
+  rounds_fused: the round-fused training loop (repro.core.fed_loop) vs
+             the host loop at C=128 — us/round both ways (bit-exact,
+             fused-row derived = max |param diff| must be 0) plus the
+             host/fused speedup row (acceptance: >= 1.5x)
 
 Full protocol details: benchmarks/fl_common.py. Run everything:
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only table1,...]
@@ -402,6 +406,101 @@ def compression(rounds=None):
     emit("compression/topk_mask_64k", us, err)
 
 
+def rounds_fused(rounds=None):
+    """Round-fused loop (repro.core.fed_loop) vs the host loop at a
+    fleet-scale cohort (C=128, full participation) on the synthetic
+    task, wide-MLP params (~45k): the host loop re-stages (C, K, b, ...)
+    batches, re-dispatches the jitted round, and pays the per-round
+    pack/unpack traffic — broadcast re-pack of the params at round
+    start, the params-tree + (C, ...) new-locals unpack at round end —
+    all scaling with C*N; the fused loop carries the state in persistent
+    flat form across an 8-round lax.scan, stages the example arena on
+    device once, and ships only (R, C, K, b) int32 gather indices per
+    block. Rows: us/round for each loop (derived of the fused row = max
+    |param diff| vs the host loop — must be 0.0, the loops are
+    bit-exact) and the speedup row (derived = host/fused, the >= 1.5x
+    acceptance figure)."""
+    del rounds
+    import jax
+    import jax.numpy as jnp
+    from repro.core import (arena_gather, flatten_fl_state, get_client_opt,
+                            get_server_opt, init_fl_state, make_fl_loop,
+                            make_fl_round, make_loss, unflatten_fl_state)
+    from repro.data.pipeline import FederatedDataset
+    from repro.data.synthetic import get_task
+    from repro.models.small import MLPConfig, make_small_model, softmax_ce
+
+    # C >= 64 at small per-client batches and the default K=2: the
+    # regime the paper's fleet-scale heterogeneity experiments live in,
+    # where per-round overhead (not the grad evals) dominates wall-clock
+    T, R, B, K, part, m = 16, 8, 4, 2, 1.0, 128
+    task = get_task("easy", seed=0)
+
+    def build():
+        return FederatedDataset.build(task, num_clients=m, alpha=1.0,
+                                      seed=0)
+
+    init_fn, logits_fn = make_small_model(
+        MLPConfig("mlp-wide-fused", input_dim=32, hidden_dims=(1024,),
+                  num_classes=10))
+    loss_fn = make_loss(
+        lambda p, b: (softmax_ce(logits_fn(p, b["x"]), b["y"]), {}))
+    copt = get_client_opt("delta_sgd")
+    sopt = get_server_opt("fedavg")
+    params = init_fn(jax.random.key(0))
+
+    def run_host(fed, rounds_n, rnd):
+        # the launch/train.py host round: stage batches, dispatch the
+        # jitted round, materialize the round's metrics row (telemetry)
+        st = init_fl_state(params, sopt)
+        for t in range(rounds_n):
+            bat, _, _ = fed.sample_round(part, K, B, round_idx=t)
+            st, met, _ = rnd(st, {"x": jnp.asarray(bat["x"]),
+                                  "y": jnp.asarray(bat["y"])})
+            jax.tree.map(np.asarray, met)
+        jax.block_until_ready(st.params["l0"]["w"])
+        return st
+
+    rnd = jax.jit(make_fl_round(loss_fn, copt, sopt, num_rounds=T,
+                                flat="xla"))
+    run_host(build(), 1, rnd)               # compile warmup
+    fed = build()
+    t0 = time.time()
+    st = run_host(fed, T, rnd)
+    us_host = (time.time() - t0) / T * 1e6
+
+    loop = make_fl_loop(loss_fn, copt, sopt, params_like=params,
+                        num_rounds=T, rounds_per_call=R, flat="xla",
+                        gather=arena_gather)
+    jloop = jax.jit(loop, donate_argnums=0)
+
+    def run_fused(fed, rounds_n):
+        arena = jax.tree.map(jnp.asarray, fed.arena())
+        fst = flatten_fl_state(init_fl_state(params, sopt), loop.layout)
+        for t in range(0, rounds_n, R):
+            idx, _, _ = fed.sample_block(part, K, B, round0=t,
+                                         rounds=min(R, rounds_n - t))
+            fst, met = jloop(fst, jnp.asarray(idx), arena=arena)
+            jax.tree.map(np.asarray, met)   # R stacked rows, one fetch
+        jax.block_until_ready(fst.P)
+        return unflatten_fl_state(fst, loop.layout)
+
+    run_fused(build(), R)                   # compile warmup
+    fed = build()
+    t0 = time.time()
+    st2 = run_fused(fed, T)
+    us_fused = (time.time() - t0) / T * 1e6
+
+    import numpy as _np
+    err = max(float(_np.max(_np.abs(_np.asarray(a, _np.float32)
+                                    - _np.asarray(b, _np.float32))))
+              for a, b in zip(jax.tree_util.tree_leaves(st.params),
+                              jax.tree_util.tree_leaves(st2.params)))
+    emit("rounds_fused/host_loop", us_host, 0.0)
+    emit(f"rounds_fused/fused_r{R}", us_fused, err)
+    emit("rounds_fused/speedup", us_fused, us_host / us_fused)
+
+
 ALL = {"table1": table1, "table2b": table2b, "table3": table3,
        "table4": table4, "fig4": fig4, "fig5": fig5,
        # convex keeps its own T=40 protocol; kernels/sharded/scenarios/
@@ -410,7 +509,8 @@ ALL = {"table1": table1, "table2b": table2b, "table3": table3,
        "kernels": kernels,
        "sharded": sharded,
        "scenarios": scenarios,
-       "compression": compression}
+       "compression": compression,
+       "rounds_fused": rounds_fused}
 
 
 def _write_csv(path: str = "bench_results.csv") -> None:

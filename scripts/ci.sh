@@ -12,7 +12,11 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 # (data, model) mesh (tests/test_flat.py needs8 cases + `sharded` bench)
 export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
 
-python -m pytest -x -q
-python -m benchmarks.run --only kernels,sharded,scenarios,compression --quick
+# fast tier first (-m "not slow"), then the slow tail — a broken fast
+# test fails CI before the multi-round/mesh-heavy tests even start
+python -m pytest -x -q -m "not slow"
+python -m pytest -x -q -m slow
+python -m benchmarks.run \
+    --only kernels,sharded,scenarios,compression,rounds_fused --quick
 python -m benchmarks.compare bench_results.csv benchmarks/baseline.json \
     --mode "${BENCH_GUARD:-hard}"

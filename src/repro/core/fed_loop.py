@@ -1,0 +1,203 @@
+"""Round-fused training loop: a multi-round ``lax.scan`` on persistent
+flat state.
+
+The host-loop drivers (launch/train.py et al.) pay one dispatch per
+round: a jitted single-round function is re-launched from Python, and
+``_make_flat_round`` re-derives the flat (C, N) buffer from the param
+pytree at the top of every call. At small models and fleet-scale client
+counts — exactly the regime the paper's heterogeneity experiments live
+in — that host round-trip dominates wall-clock.
+
+``make_fl_loop(rounds_per_call=R)`` fuses R rounds into ONE jitted
+computation:
+
+  * the carried state is a ``FlatFLState`` — the param pytree packed
+    into the (N,) flat buffer (repro.core.flat) and the EF21
+    error-feedback tree packed to (C, N). Packing happens once per
+    R-round block (``flatten_fl_state``); unpacking only at
+    eval/checkpoint cadence (``unflatten_fl_state``).
+  * a ``lax.scan`` chains R rounds of the SAME flat round body the
+    single-round engine runs (``fed_round`` attaches it to the returned
+    round_fn as ``round_fn.flat_body``), so fused and host-loop rounds
+    are bit-exact by construction.
+  * cohort scheduling stays on device: the scenario schedulers
+    (repro.federation) key every draw on ``(seed, round)`` and the round
+    counter rides in the carry, so the in-scan draws equal the host
+    pipeline's gather draw round for round.
+  * per-round batches come either pre-stacked with a leading R axis, or
+    — the fast path — as (R, C, K, b) int32 gather indices into a
+    pre-staged device-resident example arena (``arena_gather``): the
+    host ships a few hundred KB of indices per block instead of
+    re-staging the full (C, K, b, ...) batch every round.
+  * callers jit with ``donate_argnums=0`` so the carried flat buffers
+    update in place: peak live memory does not grow with R.
+
+The per-local-step kernel schedule is untouched: the scan body traces
+the fused kernel pair once (2 launches per local step), and the
+executed launch schedule of one R-round block is exactly R times the
+single round's — 2·K·R launches, still independent of leaf and client
+count.
+
+Composition: everything the flat round engine supports — sharded meshes
+(the HLO assertions hold on the scanned computation), heterogeneous K_c
+lane masks, FedBuff async buffering, delta compression + EF21 — flows
+through unchanged, because the scan body IS the single-round body.
+Metrics come back stacked: every leaf gains a leading R axis.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flat as flatlib
+from repro.core.fed_round import FLState, make_fl_round
+
+
+class FlatFLState(NamedTuple):
+    """FLState in persistent flat form — the scan carry of the fused
+    loop, and the block-boundary checkpoint payload.
+
+    ``P`` is the packed (N,) f32 global params; ``ef`` (EF21
+    compression) is the packed (C, N) f32 reconstruction state.
+    ``server_state`` and the async ``buffer`` keep their pytree form —
+    the server's per-leaf dtypes are load-bearing for bit-exact
+    arithmetic, and the buffer's f32 delta tree is the known-good form
+    under SPMD meshes (partitioning a 1-D packed concatenate mis-
+    compiles on XLA CPU, see fed_round's ``pack1``).
+    """
+    P: jax.Array
+    server_state: Any
+    round: jax.Array
+    buffer: Any = None
+    ef: Any = None
+
+
+def flatten_fl_state(state: FLState, layout: flatlib.FlatLayout
+                     ) -> FlatFLState:
+    """Pack an FLState once per R-round block. Exact: params pack to the
+    f32 buffer losslessly (bf16 -> f32 widens), and the ef tree is f32
+    already, so pack/unpack round-trips bit-for-bit."""
+    ef = state.ef
+    if ef is not None:
+        ef = flatlib.pack_batched(ef, layout)
+    fstate = FlatFLState(flatlib.pack(state.params, layout),
+                         state.server_state, state.round, state.buffer, ef)
+    # donation hygiene: jax caches scalar constants, so two zero-valued
+    # counters (e.g. FLState.round and the async buffer's count) can
+    # alias ONE device buffer — a donating Execute rejects duplicate
+    # buffers. Copy scalar leaves apart; the big buffers are fresh packs.
+    return jax.tree.map(
+        lambda x: jnp.array(x, copy=True) if getattr(x, "ndim", 1) == 0
+        else x, fstate)
+
+
+def unflatten_fl_state(fstate: FlatFLState, layout: flatlib.FlatLayout
+                       ) -> FLState:
+    """Back to pytree form — eval / checkpoint-interop cadence only."""
+    ef = fstate.ef
+    if ef is not None:
+        ef = flatlib.unpack_batched(fstate.ef, layout, cast=False)
+    return FLState(flatlib.unpack(fstate.P, layout), fstate.server_state,
+                   fstate.round, fstate.buffer, ef)
+
+
+def arena_gather(arena, idx: jax.Array):
+    """Device-side per-round batch gather: ``idx`` (C, K, b) int32 rows
+    index the staged example arena (leaves (num_examples, ...)), giving
+    (C, K, b, ...) client batches — the on-device equivalent of the host
+    pipeline's per-round numpy gather + transfer."""
+    return jax.tree.map(lambda a: a[idx], arena)
+
+
+def make_fl_loop(loss_fn, client_opt, server_opt, *, params_like,
+                 num_rounds: int, rounds_per_call: int = 8,
+                 weighted: bool = False, flat="xla", mesh=None,
+                 federation=None, scenario=None,
+                 num_clients: Optional[int] = None, client_sizes=None,
+                 compression=None, gather=None):
+    """Build the R-round fused loop.
+
+    Returns ``loop_fn(fstate, round_data, client_weights=None,
+    arena=None) -> (fstate, metrics)`` where
+
+      * ``fstate`` is a ``FlatFLState`` (``flatten_fl_state``); jit the
+        loop with ``donate_argnums=0`` so its buffers update in place;
+      * ``round_data`` leaves carry a leading R axis: stacked client
+        batches (R, C, K, b, ...), or — with ``gather`` (e.g.
+        ``arena_gather``) — per-round gather indices resolved against
+        the device-resident ``arena``;
+      * ``client_weights`` is an optional (R, C) weight block
+        (``weighted`` aggregation);
+      * ``metrics`` leaves come back stacked over the R rounds.
+
+    ``params_like`` (a params pytree or its ShapeDtypeStructs) fixes the
+    flat layout; the remaining knobs mirror ``make_fl_round`` — the loop
+    requires the flat engine (``flat`` False is rejected) and composes
+    with mesh sharding, scenarios, and compression exactly like the
+    single-round engine, because the scan body IS that engine's round
+    body. ``rounds_per_call`` is advisory: the actual R of a call is the
+    leading axis of ``round_data`` (the tail block of a training run may
+    be shorter).
+
+    State form (``loop_fn.state_form``): without a mesh the carry is the
+    persistent ``FlatFLState`` ("flat"). Under ``mesh``/``federation``
+    the scan carries the pytree ``FLState`` instead ("tree") and the
+    per-round flat conversions cancel inside each iteration: XLA CPU
+    SPMD mis-partitions a materialized 1-D packed concatenate
+    (jax<=0.4.37, see fed_round), so the (N,) carry cannot cross the
+    scan boundary under a mesh — the (C, N) round buffer, where the
+    real traffic lives, stays sharded either way (the HLO assertions
+    hold on the scanned computation).
+    """
+    if not flat:
+        raise ValueError("the round-fused loop requires the flat engine "
+                         "(flat='xla'|'pallas'): the carry is the packed "
+                         "flat buffer")
+    if rounds_per_call < 1:
+        raise ValueError(f"rounds_per_call must be >= 1, got "
+                         f"{rounds_per_call}")
+    round_fn = make_fl_round(loss_fn, client_opt, server_opt,
+                             num_rounds=num_rounds, weighted=weighted,
+                             flat=flat, mesh=mesh, federation=federation,
+                             scenario=scenario, num_clients=num_clients,
+                             client_sizes=client_sizes,
+                             compression=compression)
+    body = getattr(round_fn, "flat_body", None)
+    if body is None:  # pragma: no cover - make_fl_round always attaches it
+        raise ValueError("make_fl_round returned no flat round body")
+    shards = federation.flat_shards(mesh) if federation is not None else 1
+    layout = flatlib.layout_of(params_like, shards=shards)
+
+    sharded = mesh is not None
+
+    def loop_fn(carry, round_data, client_weights=None, arena=None):
+        if gather is not None and arena is None:
+            raise ValueError("this loop gathers batches from a staged "
+                             "arena: pass arena=")
+
+        def one_round(st, inp):
+            data, w_r = inp
+            w_r = w_r if has_w else None
+            batches = gather(arena, data) if gather is not None else data
+            if sharded:
+                st, metrics, _ = round_fn(st, batches,
+                                          client_weights=w_r)
+            else:
+                st, metrics, _ = body(st, batches, layout,
+                                      client_weights=w_r)
+            return st, metrics
+
+        # scan xs must be arrays: a missing weight block rides along as
+        # a zero-size per-round placeholder
+        R = jax.tree_util.tree_leaves(round_data)[0].shape[0]
+        w = (client_weights if client_weights is not None
+             else jnp.zeros((R, 0), jnp.float32))
+        has_w = client_weights is not None
+        return jax.lax.scan(one_round, carry, (round_data, w))
+
+    loop_fn.layout = layout
+    loop_fn.rounds_per_call = rounds_per_call
+    loop_fn.state_form = "tree" if sharded else "flat"
+    return loop_fn

@@ -329,7 +329,14 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
     under meshes the compressors run shard-locally BEFORE the
     client-mean psum, so no full-precision per-client delta ever
     crosses a shard boundary. Wire-bytes / compression-ratio telemetry
-    rides in the round metrics."""
+    rides in the round metrics.
+
+    The round logic lives in a flat-in/flat-out body working on
+    ``repro.core.fed_loop.FlatFLState`` — the returned round_fn is a
+    thin pack/unpack wrapper around it and additionally exposes it as
+    ``round_fn.flat_body``, which is what the round-fused multi-round
+    ``lax.scan`` (core/fed_loop.make_fl_loop) chains: fused and
+    host-loop rounds are the same computation by construction."""
     hyper = client_opt.hyper
     if (client_opt.name != "delta_sgd" or hyper is None
             or hyper.get("groupwise")):
@@ -373,11 +380,25 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
                                    eta0=eta0, mask=mask, active=active,
                                    backend=backend)
 
-    def round_fn(state: FLState, client_batches, client_weights=None,
-                 prev_local_params=None):
-        """-> (new_state, metrics, new_local_params (C, ...))."""
-        gp = state.params
-        layout = flatlib.layout_of(gp, shards=shards)
+    def flat_body(fstate, client_batches, layout, client_weights=None,
+                  prev_local_params=None, gp=None):
+        """One round on flat-form state (core.fed_loop.FlatFLState) ->
+        (new_fstate, metrics, P_locals (C, N)). ``gp`` optionally passes
+        the global params pytree when the caller still has it (the
+        per-round wrapper); the fused loop leaves it None and the body
+        reconstructs the views from the carried flat buffer."""
+        from repro.core.fed_loop import FlatFLState
+        if gp is None:
+            gp = flatlib.unpack(fstate.P, layout)
+
+        def pack1(tree):
+            """Pytree -> (N,) f32 for the flat carry. The 1-D packed
+            concatenate stays UNCONSTRAINED: explicitly constraining it
+            (or routing through a batch-1 2-D concat) trips the XLA CPU
+            SPMD mis-partitioning (stride-shuffled buffer, jax<=0.4.37)
+            the round-start broadcast's comment documents; the plain
+            concat round-trips correctly under the mesh."""
+            return flatlib.pack(tree, layout)
         mask = flatlib.round_mask(layout)
         if mask is not None:
             mask = constrain(mask, nspec)
@@ -391,10 +412,11 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
         # shard_map boundary is free.
         from jax.sharding import PartitionSpec as _PS
         rep = (lambda x: constrain(x, _PS())) if sharded else (lambda x: x)
-        step_counts = (rep(scenario.draw_step_counts(state.round, C, K))
+        step_counts = (rep(scenario.draw_step_counts(fstate.round, C, K))
                        if hetero else None)
 
-        # pack once at round start; clients all start from the global params
+        # broadcast the round-start params to the client axis; the carry
+        # is already flat, so no per-round pytree re-pack happens here
         if sharded:
             # broadcast leaves FIRST, then pack via the 2-D batched
             # concatenate: constraining a 1-D packed concatenate trips an
@@ -405,8 +427,7 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
                 lambda l: jnp.broadcast_to(l[None], (C,) + l.shape), gp)
             P = constrain(flatlib.pack_batched(bcast, layout), pspec)
         else:
-            P = jnp.broadcast_to(flatlib.pack(gp, layout)[None],
-                                 (C, layout.padded_size))
+            P = jnp.broadcast_to(fstate.P[None], (C, layout.padded_size))
         P_start = P if (is_async or comp is not None) else None
         S = flat_delta_sgd_init(C, layout, eta0=eta0, theta0=theta0)
         if sharded:
@@ -440,7 +461,7 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
             unroll=scan_unroll())
         losses = losses.T  # (K, C) -> (C, K), same layout as vmap engine
 
-        extra = _scenario_extras(scenario, state.round, C, num_clients,
+        extra = _scenario_extras(scenario, fstate.round, C, num_clients,
                                  client_sizes, step_counts, rep=rep)
 
         # delta compression (repro.compression): compress each client's
@@ -453,16 +474,16 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
         if comp is not None:
             from repro.compression.ops import (compress_flat,
                                                compress_flat_sharded)
-            levels = (rep(scenario.draw_compression_levels(state.round, C))
+            levels = (rep(scenario.draw_compression_levels(fstate.round, C))
                       if bw_hetero else None)
             delta = P - P_start
             if use_ef:
-                if state.ef is None:
+                if fstate.ef is None:
                     raise ValueError(
                         "error-feedback compression needs FLState.ef — "
                         "allocate it via init_fl_state(..., compression="
                         "spec, cohort=C)")
-                E = flatlib.pack_batched(state.ef, layout)
+                E = fstate.ef
                 if sharded:
                     E = constrain(E, pspec)
                 resid = delta - E
@@ -479,8 +500,7 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
             if sharded:
                 delta_hat = constrain(delta_hat, pspec)
             if use_ef:
-                new_ef = flatlib.unpack_batched(delta_hat, layout,
-                                                cast=False)
+                new_ef = delta_hat      # (C, N) flat — the EF21 carry
             # wire accounting over the VALID elements (layout.size):
             # tail padding never ships, so sharded and replicated
             # layouts (different padded_size) report identical bytes
@@ -512,18 +532,24 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
             else:
                 agg_flat = jnp.mean(P_agg, axis=0)
             agg = flatlib.unpack(constrain(agg_flat, nspec), layout)
-            new_state, metrics = _finish_round(state, agg, losses, S.eta,
-                                               server_opt,
-                                               step_counts=step_counts,
-                                               extra=extra, ef=new_ef)
+            new_params, sstate = server_opt.update(gp, agg,
+                                                   fstate.server_state)
+            metrics = _round_metrics(losses, S.eta, step_counts)
+            metrics.update(extra)
+            new_fstate = FlatFLState(
+                pack1(new_params), sstate, fstate.round + 1,
+                fstate.buffer, fstate.ef if new_ef is None else new_ef)
         else:
             # FedBuff-style async aggregation: one staleness-weighted
             # reduction over the packed client axis produces the cohort's
             # delta sum; the server only steps when the buffer holds M
-            # updates (repro.federation.buffer).
+            # updates (repro.federation.buffer). The buffer keeps its
+            # param-shaped f32 delta tree (layout-independent, and the
+            # known-good form under SPMD meshes); only the params
+            # re-enter the flat carry.
             from repro.federation.buffer import (buffer_merge, buffer_step,
                                                  staleness_weights)
-            stale = rep(scenario.draw_staleness(state.round, C))
+            stale = rep(scenario.draw_staleness(fstate.round, C))
             w = staleness_weights(stale, scenario.staleness_exp)
             if weighted and client_weights is not None:
                 w = w * client_weights.astype(jnp.float32)
@@ -532,10 +558,10 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
                 axes=(0, 0))
             delta_tree = flatlib.unpack(constrain(delta_flat, nspec),
                                         layout, cast=False)
-            buf = buffer_merge(state.buffer, delta_tree, jnp.sum(w), C,
+            buf = buffer_merge(fstate.buffer, delta_tree, jnp.sum(w), C,
                                stale)
             params, sstate, buf, flushed = buffer_step(
-                gp, state.server_state, buf, server_opt,
+                gp, fstate.server_state, buf, server_opt,
                 scenario.buffer_size)
             metrics = _round_metrics(losses, S.eta, step_counts)
             sf = stale.astype(jnp.float32)
@@ -543,10 +569,25 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
                          buffer_fill=buf.count.astype(jnp.float32),
                          flushed=flushed)
             metrics.update(extra)
-            new_state = FLState(params, sstate, state.round + 1, buf,
-                                state.ef if new_ef is None else new_ef)
+            new_fstate = FlatFLState(pack1(params), sstate,
+                                     fstate.round + 1, buf,
+                                     fstate.ef if new_ef is None else new_ef)
 
-        new_locals = flatlib.unpack_batched(P, layout)
+        return new_fstate, metrics, P
+
+    def round_fn(state: FLState, client_batches, client_weights=None,
+                 prev_local_params=None):
+        """-> (new_state, metrics, new_local_params (C, ...))."""
+        from repro.core.fed_loop import (flatten_fl_state,
+                                         unflatten_fl_state)
+        layout = flatlib.layout_of(state.params, shards=shards)
+        fstate = flatten_fl_state(state, layout)
+        new_fstate, metrics, P_locals = flat_body(
+            fstate, client_batches, layout, client_weights=client_weights,
+            prev_local_params=prev_local_params, gp=state.params)
+        new_state = unflatten_fl_state(new_fstate, layout)
+        new_locals = flatlib.unpack_batched(P_locals, layout)
         return new_state, metrics, new_locals
 
+    round_fn.flat_body = flat_body
     return round_fn

@@ -26,11 +26,17 @@ from repro.federation.schedulers import cohort_size, make_scheduler
 @dataclass
 class FederatedDataset:
     task: TaskData
-    clients: List[np.ndarray]          # per-client index arrays
+    clients: List[np.ndarray]          # per-client example sampling
     rng: np.random.Generator           # within-client example sampling
     seed: int = 0                      # scheduler PRNG seed (cohort draw)
     scenario: object = None            # optional repro.federation.Scenario
     _round: int = field(default=0, repr=False)
+    # eval draws get their OWN stream: test_batch must not advance the
+    # training-data rng, or the eval cadence would perturb the training
+    # trajectory (and break round-fused vs host-loop bit-exactness —
+    # the fused loop pre-draws a whole block of round indices before
+    # any eval runs).
+    eval_rng: np.random.Generator = None
 
     @classmethod
     def build(cls, task: TaskData, *, num_clients: int, alpha: float,
@@ -40,7 +46,8 @@ class FederatedDataset:
                                       samples_per_client, seed=seed,
                                       variable_sizes=variable_sizes)
         return cls(task, clients, np.random.default_rng(seed + 17),
-                   seed=seed, scenario=scenario)
+                   seed=seed, scenario=scenario,
+                   eval_rng=np.random.default_rng(seed + 23))
 
     @property
     def num_clients(self) -> int:
@@ -64,6 +71,33 @@ class FederatedDataset:
                              cohort=C)
         return sch, jax.random.key(self.seed)
 
+    def sample_round_indices(self, participation: float, local_steps: int,
+                             batch_size: int,
+                             round_idx: Optional[int] = None):
+        """Cohort draw + within-client example draw WITHOUT gathering:
+        returns (take (C, K, b) int32 indices into the task arrays,
+        client_weights (C,), client_ids). Consumes the exact rng stream
+        ``sample_round`` consumes, so a run that pre-computes index
+        blocks for the round-fused loop sees the same batches a
+        round-at-a-time run would gather."""
+        m = self.num_clients
+        C = cohort_size(participation, m)
+        t = self._round if round_idx is None else round_idx
+        if round_idx is None:
+            self._round += 1
+        sch, key = self._scheduler(C)
+        ids = np.asarray(sch.sample(key, t))
+        takes = []
+        for i in ids:
+            idx = self.clients[i]
+            take = self.rng.choice(idx, size=local_steps * batch_size,
+                                   replace=len(idx) < local_steps
+                                   * batch_size)
+            takes.append(take.reshape(local_steps, batch_size))
+        weights = self.client_sizes()[ids]
+        return (np.stack(takes).astype(np.int32),
+                weights.astype(np.float32), ids)
+
     def sample_round(self, participation: float, local_steps: int,
                      batch_size: int, round_idx: Optional[int] = None):
         """Returns (client_batches dict of (C,K,b,...) arrays,
@@ -72,25 +106,29 @@ class FederatedDataset:
         ``round_idx`` defaults to an internal counter (one per call), so
         driver loops that also track rounds can pass their own t and
         stay aligned with the jitted round's scenario draws."""
-        m = self.num_clients
-        C = cohort_size(participation, m)
-        t = self._round if round_idx is None else round_idx
-        if round_idx is None:
-            self._round += 1
-        sch, key = self._scheduler(C)
-        ids = np.asarray(sch.sample(key, t))
-        xs, ys = [], []
-        for i in ids:
-            idx = self.clients[i]
-            take = self.rng.choice(idx, size=local_steps * batch_size,
-                                   replace=len(idx) < local_steps
-                                   * batch_size)
-            xs.append(self.task.x[take].reshape(local_steps, batch_size,
-                                                *self.task.x.shape[1:]))
-            ys.append(self.task.y[take].reshape(local_steps, batch_size))
-        batches = {"x": np.stack(xs), "y": np.stack(ys)}
-        weights = self.client_sizes()[ids]
-        return batches, weights.astype(np.float32), ids
+        take, weights, ids = self.sample_round_indices(
+            participation, local_steps, batch_size, round_idx)
+        batches = {"x": self.task.x[take], "y": self.task.y[take]}
+        return batches, weights, ids
+
+    def sample_block(self, participation: float, local_steps: int,
+                     batch_size: int, *, round0: int, rounds: int):
+        """R rounds of gather indices for ONE round-fused loop call
+        (core.fed_loop): (idx (R, C, K, b) int32, weights (R, C),
+        ids (R, C)). The cohort draws are keyed on round0..round0+R-1 —
+        the same (seed, round) keys the in-scan scheduler reporting
+        uses — and the within-client rng stream advances in round order,
+        matching an equivalent sequence of ``sample_round`` calls."""
+        take, w, ids = zip(*(self.sample_round_indices(
+            participation, local_steps, batch_size, round_idx=round0 + r)
+            for r in range(rounds)))
+        return np.stack(take), np.stack(w), np.stack(ids)
+
+    def arena(self):
+        """The device-stageable example arena the fused loop gathers
+        from: the full task arrays, staged once per run instead of
+        re-shipping (C, K, b, ...) batches every round."""
+        return {"x": self.task.x, "y": self.task.y}
 
     def epoch_steps(self, batch_size: int) -> int:
         """K for one local epoch (paper: K = E·n_i / b with E = 1)."""
@@ -100,7 +138,8 @@ class FederatedDataset:
     def test_batch(self, n: Optional[int] = None):
         if n is None or n >= len(self.task.y_test):
             return self.task.x_test, self.task.y_test
-        idx = self.rng.choice(len(self.task.y_test), n, replace=False)
+        rng = self.eval_rng if self.eval_rng is not None else self.rng
+        idx = rng.choice(len(self.task.y_test), n, replace=False)
         return self.task.x_test[idx], self.task.y_test[idx]
 
 

@@ -141,7 +141,7 @@ def _compile_step(cfg, shape, mesh, spec, fl, *, unroll, remat,
                   use_pallas=False, seq_shard=False, quant_kv=False,
                   softmax_bf16=False, cache_seq_shard=False,
                   flat_fed=None, flat_sharded=False, scenario=None,
-                  compression=None, clients=None):
+                  compression=None, clients=None, rounds_per_call=1):
     """Lower + compile one program variant. Returns (compiled, t_lower,
     t_compile, analytic). ``flat_sharded`` (flat_fed only) threads the
     mesh + FederationSpec into the round so the packed (C, N) buffer
@@ -153,7 +153,10 @@ def _compile_step(cfg, shape, mesh, spec, fl, *, unroll, remat,
     (default ``spec.clients_on(mesh)`` — one client per client-axis
     coordinate); a multiple of it stacks several clients per shard,
     which the compressed-boundary HLO assertion needs to tell a leaked
-    delta slab from the aggregated mean."""
+    delta slab from the aggregated mean. ``rounds_per_call`` > 1 (train
+    shapes, flat_fed only) lowers the round-fused R-round ``lax.scan``
+    loop (repro.core.fed_loop) instead of the single round — batches
+    gain a leading R axis, the carried state is donated."""
     import repro.models.attention as _att
     from repro.models.common import logical_rules, unroll_scans
     _att.SOFTMAX_BF16 = softmax_bf16
@@ -163,7 +166,42 @@ def _compile_step(cfg, shape, mesh, spec, fl, *, unroll, remat,
     analytic = None
     t0 = time.time()
     with mesh, unroll_scans(unroll), logical_rules(rules):
-        if shape.kind == "train":
+        if shape.kind == "train" and rounds_per_call > 1:
+            if not (flat_fed and flat_sharded):
+                raise ValueError("rounds_per_call > 1 on a mesh requires "
+                                 "the sharded flat engine (flat_fed=True, "
+                                 "flat_sharded=True): the mesh-form loop "
+                                 "carries the tree FLState whose "
+                                 "shardings this driver derives")
+            from repro.launch.steps import make_train_loop
+            loop, sopt, scn, comp = make_train_loop(
+                model, fl, rounds_per_call=rounds_per_call,
+                use_pallas=use_pallas, remat=remat,
+                mesh=mesh if flat_sharded else None,
+                federation=spec if flat_sharded else None,
+                scenario=scenario, compression=compression)
+            C = clients or spec.clients_on(mesh)
+            # under a mesh the fused loop carries the tree-form FLState
+            # (fed_loop.state_form) — the single-round state shardings
+            # apply verbatim; batches just gain the leading R axis
+            state_struct = abstract_fl_state(model, sopt, scn, comp, C)
+            R = rounds_per_call
+            round_batch = train_specs(model, shape, fl, C)
+            batch = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((R,) + s.shape, s.dtype),
+                round_batch)
+            param_sh = make_param_shardings(spec, mesh, state_struct.params)
+            state_sh = _state_shardings(mesh, spec, state_struct, param_sh)
+            batch_sh = jax.tree.map(
+                lambda sh: NamedSharding(mesh, P(None, *sh.spec)),
+                batch_shardings(spec, mesh, round_batch),
+                is_leaf=lambda x: isinstance(x, NamedSharding))
+            analytic = analytic_memory(cfg, shape, spec, mesh,
+                                       state_struct.params, param_sh, fl)
+            lowered = jax.jit(loop, in_shardings=(state_sh, batch_sh),
+                              donate_argnums=0
+                              ).lower(state_struct, batch)
+        elif shape.kind == "train":
             step, sopt, scn, comp = make_train_step(
                 model, fl, use_pallas=use_pallas, remat=remat, flat=flat_fed,
                 mesh=mesh if (flat_fed and flat_sharded) else None,
@@ -309,12 +347,14 @@ def lower_one(arch: str, shape_id: str, multi_pod: bool, *,
 
 def scenario_smoke(verbose: bool = True):
     """CI scenario leg: compile the flat_fed_hetero / flat_fed_async /
-    flat_fed_compressed rounds of a reduced config on an 8-virtual-device
-    (4, 2) host mesh and assert the packed (C, N) buffer stays sharded
-    under every scenario variant — the compressed variant additionally
-    asserts no full-precision client delta crosses the client shard
-    boundary (the production-mesh versions run via ``launch/perf.py
-    --variants flat_fed_hetero,flat_fed_async,flat_fed_compressed``)."""
+    flat_fed_compressed rounds — plus the round-fused R-round scan
+    (flat_fed_rounds_fused, repro.core.fed_loop) — of a reduced config
+    on an 8-virtual-device (4, 2) host mesh and assert the packed (C, N)
+    buffer stays sharded under every variant; the compressed variant
+    additionally asserts no full-precision client delta crosses the
+    client shard boundary (the production-mesh versions run via
+    ``launch/perf.py --variants flat_fed_hetero,flat_fed_async,
+    flat_fed_compressed,flat_fed_rounds_fused``)."""
     from repro.configs.base import ShapeConfig
     from repro.core import flat as flatlib
     from repro.models.model import build_model
@@ -331,13 +371,16 @@ def scenario_smoke(verbose: bool = True):
     pstruct = jax.eval_shape(model.init, jax.random.key(0))
     layout = flatlib.layout_of(pstruct, shards=spec.flat_shards(mesh))
     from repro.compression import CompressionSpec
-    for variant, scn, comp in (
-            ("flat_fed_hetero", "dirichlet_stragglers", None),
-            ("flat_fed_async", "zipf_async", None),
+    for variant, scn, comp, rpc in (
+            ("flat_fed_hetero", "dirichlet_stragglers", None, 1),
+            ("flat_fed_async", "zipf_async", None, 1),
             # error_feedback=True allocates FLState.ef, so the compiled
             # program (and both HLO assertions) covers the EF sharding
             ("flat_fed_compressed", "bandwidth_tiered",
-             CompressionSpec(kind="int8", error_feedback=True))):
+             CompressionSpec(kind="int8", error_feedback=True), 1),
+            # round-fused loop (repro.core.fed_loop): the sharded-buffer
+            # assertion must hold on the SCANNED computation too
+            ("flat_fed_rounds_fused", "dirichlet_stragglers", None, 4)):
         # the compressed variant stacks 2 clients per client shard so
         # the boundary assertion can tell a leaked full-precision delta
         # slab (C_loc, N_loc) from the legitimate (N_loc,) client mean
@@ -347,7 +390,7 @@ def scenario_smoke(verbose: bool = True):
                                      unroll=False, remat=False,
                                      flat_fed=True, flat_sharded=True,
                                      scenario=scn, compression=comp,
-                                     clients=C)
+                                     clients=C, rounds_per_call=rpc)
         rep = assert_flat_buffer_sharded(compiled, C, layout.padded_size)
         extra = ""
         if comp is not None:
@@ -381,9 +424,10 @@ def main():
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--scenario-smoke", action="store_true",
                     help="compile flat_fed_hetero + flat_fed_async + "
-                         "flat_fed_compressed on an 8-virtual-device mesh "
-                         "and check the sharded-buffer + compressed-"
-                         "boundary HLO assertions (CI scenario leg)")
+                         "flat_fed_compressed + flat_fed_rounds_fused on "
+                         "an 8-virtual-device mesh and check the sharded-"
+                         "buffer + compressed-boundary HLO assertions "
+                         "(CI scenario leg)")
     args = ap.parse_args()
 
     if args.scenario_smoke:

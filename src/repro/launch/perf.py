@@ -42,6 +42,11 @@ Variants:
                full-precision delta across the client boundary, the
                latter skipped with a note when the production spec
                leaves < 2 clients per client shard)
+  flat_fed_rounds_fused
+               round-fused training loop (repro.core.fed_loop): 8
+               rounds as ONE jitted lax.scan on the sharded flat
+               engine, donated carry; sharded-buffer HLO assertion on
+               the scanned computation
 """
 import argparse
 import json
@@ -94,6 +99,13 @@ VARIANT_KNOBS = {
                             "scenario": "bandwidth_tiered",
                             "compression": CompressionSpec(
                                 kind="int8", error_feedback=True)},
+    # round-fused training loop (repro.core.fed_loop): 8 rounds as one
+    # lax.scan on the sharded flat engine — proves the fused program
+    # lowers/compiles on the production mesh and that the sharded-buffer
+    # HLO assertion holds on the SCANNED computation (cost-analysis
+    # counts the round body once, so the roofline terms are per-round)
+    "flat_fed_rounds_fused": {"flat_fed": True, "flat_sharded": True,
+                              "rounds_per_call": 8},
 }
 
 

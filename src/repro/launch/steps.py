@@ -9,7 +9,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
 from repro.core import (get_client_opt, get_server_opt, init_fl_state,
-                        make_fl_round, make_loss)
+                        make_fl_loop, make_fl_round, make_loss)
 from repro.models.model import Model
 
 
@@ -77,6 +77,57 @@ def make_train_step(model: Model, fl: FLConfig, *, num_rounds: int = 1000,
         return new_state, metrics
 
     return train_step, sopt, scenario, compression
+
+
+def make_train_loop(model: Model, fl: FLConfig, *, num_rounds: int = 1000,
+                    rounds_per_call: int = 8, use_pallas: bool = False,
+                    remat: bool = False, mesh=None, federation=None,
+                    scenario=None, compression=None):
+    """R rounds fused into one jitted call (core.fed_loop.make_fl_loop):
+    ``lax.scan`` over the flat round body on a persistent flat carry —
+    batches arrive with a leading R axis (stacked, or arena gather
+    indices via ``repro.core.arena_gather``), metrics come back stacked.
+
+    Same resolution rules as ``make_train_step``, except the flat engine
+    is REQUIRED (the loop carries the packed flat state), so
+    ``fl.client_opt`` must be ``delta_sgd``. Returns
+    (train_loop, sopt, scenario, compression); the loop exposes
+    ``.layout`` (for flatten/unflatten at block boundaries) and
+    ``.state_form`` ("flat", or "tree" under meshes — see
+    core.fed_loop). Jit the loop with ``donate_argnums=0`` so the
+    carried buffers update in place.
+    """
+    if fl.client_opt != "delta_sgd":
+        raise ValueError("the round-fused loop requires client_opt="
+                         f"'delta_sgd', got {fl.client_opt!r}")
+    copt = get_client_opt(fl.client_opt, fl, use_pallas=use_pallas)
+    sopt = get_server_opt(fl.server_opt)
+    if scenario is None and fl.scenario:
+        scenario = fl.scenario
+    if scenario is not None and not hasattr(scenario, "is_async"):
+        from repro.federation import get_scenario
+        scenario = get_scenario(scenario)
+    from repro.compression import get_compression
+    compression = get_compression(compression if compression is not None
+                                  else fl.compression_spec)
+
+    def base_loss(params, batch):
+        from repro.models.common import remat_blocks
+        with remat_blocks(remat):
+            return model.loss(params, batch, use_pallas=use_pallas)
+
+    loss_fn = make_loss(base_loss, fedprox_mu=fl.fedprox_mu)
+    params_like = jax.eval_shape(model.init, jax.random.key(0))
+    train_loop = make_fl_loop(loss_fn, copt, sopt, params_like=params_like,
+                              num_rounds=num_rounds,
+                              rounds_per_call=rounds_per_call,
+                              weighted=fl.weighted_agg,
+                              flat="pallas" if use_pallas else "xla",
+                              mesh=mesh, federation=federation,
+                              scenario=scenario,
+                              num_clients=fl.num_clients,
+                              compression=compression)
+    return train_loop, sopt, scenario, compression
 
 
 def make_prefill_step(model: Model, *, window: Optional[int] = None,

@@ -28,6 +28,18 @@ per-chunk quantization or magnitude top-k, optional EF21 error
 feedback); the round log and the report gain wire-bytes /
 compression-ratio telemetry. Combine with ``--scenario
 bandwidth_tiered`` to draw per-client compression levels each round.
+
+``--rounds-per-call R`` (R > 1) switches the training loop onto the
+round-fused engine (repro.core.fed_loop): R rounds run as ONE jitted
+``lax.scan`` on the persistent flat state, with donated buffers. The
+paper-task driver stages the example arena on device once and ships
+only (R, C, K, b) gather indices per block; the LM driver stacks R
+rounds of synthetic batches. Metrics are bit-exact vs the host loop on
+the flat engine (``--flat`` forces it for a host-loop parity run);
+checkpoints land on block boundaries (still keyed on the round
+counter, so fused and host-loop checkpoints interoperate), and eval /
+state unpacking happens only at block cadence. Requires
+``--client-opt delta_sgd``.
 """
 from __future__ import annotations
 
@@ -104,6 +116,39 @@ class _ScenarioStats:
         return s
 
 
+def _run_fused(args, loop, state, rounds, stage_block, on_round):
+    """Drive the round-fused loop (repro.core.fed_loop) in R-round
+    blocks on donated flat state. ``stage_block(round0, n) ->
+    (round_data, arena)`` stages one block's batches (or arena gather
+    indices); ``on_round(t, row)`` consumes one round's metrics row.
+    The flat carry is unpacked ONLY at block boundaries — that is the
+    checkpoint cadence of a fused run: saves land on the first boundary
+    at or after each ``--ckpt-every`` hit, keyed on the round counter
+    like the host loop's (so fused and host-loop checkpoints
+    interoperate via --resume). Returns the final FLState."""
+    from repro.checkpoint import save
+    from repro.core import flatten_fl_state, unflatten_fl_state
+    R = args.rounds_per_call
+    layout = loop.layout
+    jloop = jax.jit(loop, donate_argnums=0)
+    fstate = flatten_fl_state(state, layout)
+    base, t = int(state.round), 0
+    while t < rounds:
+        n = min(R, rounds - t)
+        data, arena = stage_block(base + t, n)
+        fstate, mets = jloop(fstate, data, arena=arena)
+        mets = jax.tree.map(np.asarray, mets)
+        for r in range(n):
+            on_round(t + r, {k: v[r] for k, v in mets.items()})
+        t += n
+        cadence_hit = any(t0 % args.ckpt_every == 0
+                          for t0 in range(t - n, t))
+        if args.ckpt_dir and (cadence_hit or t >= rounds):
+            boundary = unflatten_fl_state(fstate, layout)
+            save(args.ckpt_dir, boundary, step=int(boundary.round))
+    return unflatten_fl_state(fstate, layout)
+
+
 def train_lm(args):
     from repro.models import build_model
     cfg = get_config(args.arch)
@@ -121,13 +166,8 @@ def train_lm(args):
                         fedprox_mu=fl.fedprox_mu)
     comp = _resolve_compression(args)
     comp_active = comp.active(scn)
-    flat = ("xla" if ((scn is not None and scn.is_async) or comp_active)
-            else False)
-    round_fn = jax.jit(make_fl_round(loss_fn, copt, sopt,
-                                     num_rounds=args.rounds, flat=flat,
-                                     scenario=scn,
-                                     num_clients=args.num_clients,
-                                     compression=comp))
+    flat = ("xla" if (args.flat or (scn is not None and scn.is_async)
+                      or comp_active) else False)
     params = model.init(jax.random.key(args.seed))
     state = init_fl_state(params, sopt, scn, compression=comp,
                           cohort=args.clients_per_round)
@@ -143,16 +183,10 @@ def train_lm(args):
         extras["image_embeds"] = (cfg.num_image_tokens, cfg.d_model)
 
     t0 = time.time()
-    for t in range(args.rounds):
-        batches = lm_round_batches(rng, clients=args.clients_per_round,
-                                   local_steps=fl.local_steps,
-                                   batch=args.batch, seq=args.seq,
-                                   vocab=cfg.vocab_size, extras=extras)
-        batches = jax.tree.map(jnp.asarray, batches)
-        state, metrics, _ = round_fn(state, batches)
+
+    def log_round(t, metrics):
         if stats:
             stats.update(None, metrics)
-        _maybe_ckpt(args, state, t, final=(t == args.rounds - 1))
         if t % max(1, args.rounds // 10) == 0 or t == args.rounds - 1:
             wire = (f" wire {float(metrics['wire_bytes'])/1e6:.2f}MB "
                     f"(x{float(metrics['comp_ratio']):.2f})"
@@ -160,6 +194,48 @@ def train_lm(args):
             print(f"round {t:4d} loss {float(metrics['loss']):.4f} "
                   f"eta {float(metrics['eta_mean']):.4f}{wire} "
                   f"({time.time() - t0:.0f}s)", flush=True)
+
+    if args.rounds_per_call > 1:
+        from repro.core import make_fl_loop
+        loop = make_fl_loop(loss_fn, copt, sopt, params_like=params,
+                            num_rounds=args.rounds,
+                            rounds_per_call=args.rounds_per_call,
+                            flat="pallas" if args.use_pallas else "xla",
+                            scenario=scn, num_clients=args.num_clients,
+                            compression=comp)
+
+        def stage_block(round0, n):
+            blocks = [lm_round_batches(rng,
+                                       clients=args.clients_per_round,
+                                       local_steps=fl.local_steps,
+                                       batch=args.batch, seq=args.seq,
+                                       vocab=cfg.vocab_size,
+                                       extras=extras)
+                      for _ in range(n)]
+            stacked = {k: jnp.asarray(np.stack([b[k] for b in blocks]))
+                       for k in blocks[0]}
+            return stacked, None
+
+        state = _run_fused(args, loop, state, args.rounds, stage_block,
+                           log_round)
+        if stats:
+            stats.report(args.out)
+        return state
+
+    round_fn = jax.jit(make_fl_round(loss_fn, copt, sopt,
+                                     num_rounds=args.rounds, flat=flat,
+                                     scenario=scn,
+                                     num_clients=args.num_clients,
+                                     compression=comp))
+    for t in range(args.rounds):
+        batches = lm_round_batches(rng, clients=args.clients_per_round,
+                                   local_steps=fl.local_steps,
+                                   batch=args.batch, seq=args.seq,
+                                   vocab=cfg.vocab_size, extras=extras)
+        batches = jax.tree.map(jnp.asarray, batches)
+        state, metrics, _ = round_fn(state, batches)
+        log_round(t, metrics)
+        _maybe_ckpt(args, state, t, final=(t == args.rounds - 1))
     if stats:
         stats.report(args.out)
     return state
@@ -212,19 +288,61 @@ def train_paper_task(args):
     K = fed.epoch_steps(args.batch)
     comp = _resolve_compression(args)
     comp_active = comp.active(scn)
-    flat = ("xla" if ((scn is not None and scn.is_async) or comp_active)
-            else False)
-    round_fn = jax.jit(make_fl_round(
-        loss_fn, copt, sopt, num_rounds=args.rounds, flat=flat,
-        scenario=scn, num_clients=args.num_clients,
-        client_sizes=fed.client_sizes() if scn else None,
-        compression=comp))
+    flat = ("xla" if (args.flat or (scn is not None and scn.is_async)
+                      or comp_active) else False)
     state = init_fl_state(init_fn(jax.random.key(args.seed)), sopt, scn,
                           compression=comp, cohort=fl.clients_per_round)
     state = _maybe_resume(args, state)
     stats = (_ScenarioStats(scn, args.num_clients)
              if (scn or comp_active) else None)
     t0 = time.time()
+
+    if args.rounds_per_call > 1:
+        # round-fused path: stage the example arena on device ONCE and
+        # ship only (R, C, K, b) gather indices per block — the in-scan
+        # gather (repro.core.arena_gather) replaces the per-round host
+        # gather + transfer, and the cohort index stream is the same
+        # rng stream sample_round consumes, so metrics/params stay
+        # bit-exact vs the host loop on the flat engine.
+        from repro.core import arena_gather, make_fl_loop
+        loop = make_fl_loop(
+            loss_fn, copt, sopt,
+            params_like=jax.eval_shape(init_fn, jax.random.key(args.seed)),
+            num_rounds=args.rounds, rounds_per_call=args.rounds_per_call,
+            flat="pallas" if args.use_pallas else "xla", scenario=scn,
+            num_clients=args.num_clients,
+            client_sizes=fed.client_sizes() if scn else None,
+            compression=comp, gather=arena_gather)
+        arena = jax.tree.map(jnp.asarray, fed.arena())
+
+        def stage_block(round0, n):
+            idx, _, _ = fed.sample_block(fl.participation, K, args.batch,
+                                         round0=round0, rounds=n)
+            return jnp.asarray(idx), arena
+
+        def log_round(t, row):
+            if stats:
+                stats.update(None, row)
+            if t % max(1, args.rounds // 10) == 0 or t == args.rounds - 1:
+                print(f"round {t:4d} loss {float(row['loss']):.4f} "
+                      f"eta {float(row['eta_mean']):.4f} "
+                      f"({time.time() - t0:.0f}s)", flush=True)
+
+        state = _run_fused(args, loop, state, args.rounds, stage_block,
+                           log_round)
+        xt, yt = fed.test_batch(2000)
+        acc = float(accuracy(logits_fn(state.params, jnp.asarray(xt)),
+                             jnp.asarray(yt)))
+        print(f"final test-acc {acc:.4f}", flush=True)
+        if stats:
+            stats.report(args.out, extra={"final_acc": acc})
+        return state
+
+    round_fn = jax.jit(make_fl_round(
+        loss_fn, copt, sopt, num_rounds=args.rounds, flat=flat,
+        scenario=scn, num_clients=args.num_clients,
+        client_sizes=fed.client_sizes() if scn else None,
+        compression=comp))
     for t in range(args.rounds):
         # key the host-side cohort draw on the ROUND COUNTER IN THE
         # STATE, not the loop index: after --resume the loop restarts at
@@ -293,6 +411,14 @@ def main():
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--fedprox-mu", type=float, default=0.0)
     ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--rounds-per-call", type=int, default=1,
+                    help="R > 1 fuses R rounds into one jitted lax.scan "
+                         "on persistent flat state (repro.core.fed_loop); "
+                         "requires --client-opt delta_sgd")
+    ap.add_argument("--flat", action="store_true",
+                    help="force the flat Δ-SGD engine in the host loop "
+                         "(the engine --rounds-per-call fuses, for "
+                         "bit-exact parity runs)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--resume", action="store_true")

@@ -1,0 +1,94 @@
+"""Shared runner for the golden-trajectory regression fixtures.
+
+One small, fully deterministic FL run per engine configuration; the
+fixtures under ``tests/golden/`` pin the per-round loss / η traces (and
+a final-params l2) so any numerical drift in the round engines — packer,
+kernels, scenario masking, compression, aggregation — fails the suite
+loudly. Regenerate with ``python tests/golden/regen.py`` (only when a
+numeric change is INTENDED; the diff is the review artifact).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+# engine configurations the fixtures pin. seed_vmap is the paper-faithful
+# per-leaf engine; the flat_* cases are the packed flat engine the fused
+# loop builds on (bit-exact asserted), incl. a heterogeneous-K scenario
+# and int8+EF21 delta compression.
+CASES = {
+    "seed_vmap": dict(flat=False),
+    "flat_xla": dict(flat="xla"),
+    "flat_scenario": dict(flat="xla", scenario="dirichlet_stragglers"),
+    "flat_int8_ef21": dict(flat="xla", compression=True),
+}
+
+ROUNDS, CLIENTS, PART, BATCH, LOCAL_STEPS, SEED = 5, 20, 0.2, 8, 3, 7
+
+
+def run_case(name):
+    """-> {"loss": [R floats], "loss_last_step": [...], "eta_mean":
+    [...], "params_l2": float} for one fixture case. Fully
+    deterministic: fixed seeds, fixed cohort draws keyed on (seed,
+    round), eval rng untouched."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs.paper_tasks import MLP_SMALL
+    from repro.core import (get_client_opt, get_server_opt, init_fl_state,
+                            make_fl_round, make_loss)
+    from repro.data.pipeline import FederatedDataset
+    from repro.data.synthetic import get_task
+    from repro.models.small import make_small_model, softmax_ce
+
+    spec = CASES[name]
+    scn = None
+    if spec.get("scenario"):
+        from repro.federation import get_scenario
+        scn = get_scenario(spec["scenario"], seed=SEED)
+    comp = None
+    if spec.get("compression"):
+        from repro.compression import CompressionSpec
+        comp = CompressionSpec(kind="int8", error_feedback=True)
+
+    task = get_task("easy", seed=SEED)
+    fed = FederatedDataset.build(task, num_clients=CLIENTS, alpha=0.5,
+                                 seed=SEED, scenario=scn)
+    init_fn, logits_fn = make_small_model(MLP_SMALL)
+    loss_fn = make_loss(
+        lambda p, b: (softmax_ce(logits_fn(p, b["x"]), b["y"]), {}))
+    copt = get_client_opt("delta_sgd")
+    sopt = get_server_opt("fedavg")
+    rnd = jax.jit(make_fl_round(loss_fn, copt, sopt, num_rounds=ROUNDS,
+                                flat=spec["flat"], scenario=scn,
+                                num_clients=CLIENTS,
+                                client_sizes=(fed.client_sizes()
+                                              if scn else None),
+                                compression=comp))
+    from repro.federation.schedulers import cohort_size
+    C = cohort_size(PART, CLIENTS)
+    state = init_fl_state(init_fn(jax.random.key(SEED)), sopt, scn,
+                          compression=comp, cohort=C)
+    out = {"loss": [], "loss_last_step": [], "eta_mean": []}
+    for t in range(ROUNDS):
+        bat, _, _ = fed.sample_round(PART, LOCAL_STEPS, BATCH,
+                                     round_idx=t)
+        state, m, _ = rnd(state, {"x": jnp.asarray(bat["x"]),
+                                  "y": jnp.asarray(bat["y"])})
+        for k in out:
+            out[k].append(float(np.float32(m[k])))
+    out["params_l2"] = float(np.float32(np.sqrt(sum(
+        float(jnp.sum(jnp.square(l.astype(jnp.float32))))
+        for l in jax.tree_util.tree_leaves(state.params)))))
+    return out
+
+
+def fixture_path(name):
+    return os.path.join(GOLDEN_DIR, name + ".json")
+
+
+def load_fixture(name):
+    with open(fixture_path(name)) as f:
+        return json.load(f)

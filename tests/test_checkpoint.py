@@ -142,3 +142,71 @@ def test_final_round_always_checkpointed(tmp_path):
     # new checkpoints must be numbered past the pre-resume ones
     _maybe_ckpt(args, st(T + 1), 0)
     assert latest_step(str(tmp_path)) == T + 1
+
+
+def test_roundtrip_flat_form_state(tmp_path, rng):
+    """Flat-form FLState round-trip (repro.core.fed_loop.FlatFLState —
+    what a fused run carries between block boundaries): save/restore is
+    bit-exact on the packed buffers, and unflattening the restored flat
+    state equals the pytree state it was packed from — so a fused run's
+    block-boundary checkpoints interoperate with the host loop's."""
+    from repro.compression import CompressionSpec
+    from repro.core import flat as fp
+    from repro.core import flatten_fl_state, unflatten_fl_state
+    from repro.federation import get_scenario
+    params = {"w": jnp.asarray(rng.normal(size=(40, 3)), jnp.float32),
+              "e": jnp.asarray(rng.normal(size=(9,)), jnp.bfloat16)}
+    scn = get_scenario("zipf_async")
+    comp = CompressionSpec(kind="int8", error_feedback=True)
+    sopt = get_server_opt("fedadam")
+    state = init_fl_state(params, sopt, scn, compression=comp, cohort=3)
+    state = state._replace(ef=jax.tree.map(lambda e: e + 0.5, state.ef))
+    layout = fp.layout_of(params)
+    fstate = flatten_fl_state(state, layout)
+    save(str(tmp_path), fstate, step=4)
+    restored, step = restore(str(tmp_path), like=fstate)
+    assert step == 4
+    _assert_trees_equal(fstate, restored)
+    _assert_trees_equal(jax.tree_util.tree_leaves(
+        unflatten_fl_state(restored, layout)),
+        jax.tree_util.tree_leaves(state))
+
+
+def test_fused_block_checkpoint_resumes_host_loop(tmp_path, rng):
+    """A checkpoint written at a fused block boundary resumes a HOST
+    loop bit-identically: fused rounds 0..3 -> checkpoint -> host rounds
+    4..5 equals six host rounds straight through."""
+    from repro.core import (flatten_fl_state, make_fl_loop,
+                            unflatten_fl_state)
+
+    def quad(p, batch):
+        r = batch["A"] @ p["x"] - batch["b"]
+        return 0.5 * jnp.mean(r * r), {}
+
+    D, C, K, Rb = 24, 3, 2, 4
+    batches = {"A": jnp.asarray(rng.normal(size=(6, C, K, 4, D)),
+                                jnp.float32),
+               "b": jnp.asarray(rng.normal(size=(6, C, K, 4)),
+                                jnp.float32)}
+    params = {"x": jnp.asarray(rng.normal(size=D), jnp.float32)}
+    loss = make_loss(quad)
+    copt, sopt = get_client_opt("delta_sgd"), get_server_opt("fedavg")
+    rnd = jax.jit(make_fl_round(loss, copt, sopt, num_rounds=10,
+                                flat="xla"))
+
+    st_ref = init_fl_state(params, sopt)
+    for r in range(6):
+        st_ref, _, _ = rnd(st_ref, jax.tree.map(lambda x: x[r], batches))
+
+    loop = make_fl_loop(loss, copt, sopt, params_like=params,
+                        num_rounds=10, rounds_per_call=Rb, flat="xla")
+    fst = flatten_fl_state(init_fl_state(params, sopt), loop.layout)
+    fst, _ = jax.jit(loop)(fst, jax.tree.map(lambda x: x[:Rb], batches))
+    boundary = unflatten_fl_state(fst, loop.layout)
+    save(str(tmp_path), boundary, step=int(boundary.round))
+
+    st, step = restore(str(tmp_path), like=init_fl_state(params, sopt))
+    assert step == Rb and int(st.round) == Rb
+    for r in range(Rb, 6):
+        st, _, _ = rnd(st, jax.tree.map(lambda x: x[r], batches))
+    _assert_trees_equal(st_ref.params, st.params)

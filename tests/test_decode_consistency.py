@@ -10,6 +10,9 @@ import repro.models.moe as moe
 from repro.configs import ARCH_IDS, get_config
 from repro.models import build_model
 
+# heavyweight tier: CI runs -m 'not slow' first (scripts/ci.sh)
+pytestmark = pytest.mark.slow
+
 B, S = 2, 33
 
 

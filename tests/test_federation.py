@@ -421,6 +421,7 @@ def _fl_problem(rng, C=8, K=3, Dm=300, E=40):
 @needs8
 @pytest.mark.parametrize("scn_name", ["dirichlet_stragglers",
                                       "zipf_async"])
+@pytest.mark.slow
 def test_sharded_scenario_round_matches_replicated(scn_name, rng):
     """Acceptance: scenario rounds on the sharded flat engine == the
     replicated flat engine (≤1e-5) AND the packed (C, N) buffer never

@@ -302,6 +302,7 @@ def test_layout_cache_key_includes_shard_count(rng):
 
 @needs8
 @pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.slow
 def test_sharded_step_matches_replicated_flat(backend, rng):
     """flat_delta_sgd_step_sharded == flat_delta_sgd_step over a K-step
     run on an 8-device mesh, incl. the bf16 round-mask path."""
@@ -344,6 +345,7 @@ def test_sharded_step_matches_replicated_flat(backend, rng):
 
 @needs8
 @pytest.mark.parametrize("fed", ["cross_device", "cross_silo"])
+@pytest.mark.slow
 def test_sharded_round_matches_replicated_flat(fed, rng):
     """Tentpole acceptance: sharded pack -> K-step scan -> unpack matches
     the replicated flat engine to <= 1e-5 on an 8-device host mesh, for
@@ -375,6 +377,7 @@ def test_sharded_round_matches_replicated_flat(fed, rng):
 
 
 @needs8
+@pytest.mark.slow
 def test_sharded_round_hlo_never_materializes_full_buffer(rng):
     """Acceptance: the compiled sharded round contains NO involuntary
     resharding copies (or any other rematerialization) of the full
@@ -454,3 +457,83 @@ def test_eta_metrics_nan_for_non_delta_and_finite_for_delta(rng):
         if finite:
             assert float(m["eta_min"]) <= float(m["eta_mean"]) \
                 <= float(m["eta_max"])
+
+
+# ----------------------------------------------------- property testing
+# pack/unpack roundtrip identity across random pytree shapes, bf16/f32
+# mixes, and shard counts. Runs under real hypothesis when installed and
+# under the vendored deterministic fallback otherwise (conftest).
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+def _prop_tree(sizes, bf16_mask, cdim=None):
+    """Deterministic tree from drawn leaf sizes: mixed ranks (0-D/1-D/
+    2-D), mixed f32/bf16 per the mask bits, values seeded by the draw."""
+    rng = np.random.default_rng(sum(sizes) * 31 + bf16_mask + 7)
+    tree = {}
+    for i, size in enumerate(sizes):
+        if size == 1 and i % 2:
+            shape = ()                      # scalar leaf
+        elif size > 12 and size % 3 == 0:
+            shape = (3, size // 3)
+        else:
+            shape = (size,)
+        if cdim is not None:
+            shape = (cdim,) + shape
+        dtype = jnp.bfloat16 if (bf16_mask >> i) & 1 else jnp.float32
+        tree[f"l{i}"] = jnp.asarray(rng.normal(size=shape) * 3.0, dtype)
+    return tree
+
+
+@settings(max_examples=25, deadline=None)
+@given(sizes=st.lists(st.integers(1, 400), min_size=1, max_size=6),
+       bf16_mask=st.integers(0, 63), shards=st.integers(1, 4))
+@pytest.mark.slow
+def test_pack_unpack_roundtrip_property(sizes, bf16_mask, shards):
+    tree = _prop_tree(sizes, bf16_mask)
+    layout = fp.layout_of(tree, shards=shards)
+    # shard alignment: each of the `shards` contiguous slabs is itself
+    # lane-aligned, and all padding lives in the zero-filled global tail
+    assert layout.padded_size % (shards * fp.LANES) == 0
+    assert layout.size == sum(
+        int(np.prod(l.shape, dtype=np.int64)) if l.shape else 1
+        for l in jax.tree_util.tree_leaves(tree))
+    buf = fp.pack(tree, layout)
+    assert buf.shape == (layout.padded_size,)
+    assert float(jnp.sum(jnp.abs(buf[layout.size:]))) == 0.0
+    back = fp.unpack(buf, layout)
+    for k in tree:
+        assert back[k].dtype == tree[k].dtype
+        assert back[k].shape == tree[k].shape
+        np.testing.assert_array_equal(np.asarray(back[k], np.float32),
+                                      np.asarray(tree[k], np.float32))
+    # round_mask marks exactly the sub-f32 lanes
+    mask = fp.round_mask(layout)
+    n_bf16 = sum(s.size for s in layout.leaves
+                 if s.dtype == jnp.dtype(jnp.bfloat16))
+    assert (mask is None and n_bf16 == 0) or \
+        float(jnp.sum(mask)) == n_bf16
+
+
+@settings(max_examples=15, deadline=None)
+@given(sizes=st.lists(st.integers(1, 300), min_size=1, max_size=5),
+       bf16_mask=st.integers(0, 31), shards=st.integers(1, 4),
+       cdim=st.integers(1, 5))
+@pytest.mark.slow
+def test_pack_unpack_batched_roundtrip_property(sizes, bf16_mask, shards,
+                                                cdim):
+    tree = _prop_tree(sizes, bf16_mask, cdim=cdim)
+    layout = fp.layout_of(tree, batched=True, shards=shards)
+    buf = fp.pack_batched(tree, layout)
+    assert buf.shape == (cdim, layout.padded_size)
+    assert float(jnp.sum(jnp.abs(buf[:, layout.size:]))) == 0.0
+    back = fp.unpack_batched(buf, layout)
+    raw = fp.unpack_batched(buf, layout, cast=False)
+    for k in tree:
+        assert back[k].dtype == tree[k].dtype
+        assert raw[k].dtype == jnp.float32      # cast=False keeps f32
+        np.testing.assert_array_equal(np.asarray(back[k], np.float32),
+                                      np.asarray(tree[k], np.float32))
+    # the (treedef, shapes, dtypes, shards) cache key: same draw hits
+    # the cached layout object
+    assert fp.layout_of(tree, batched=True, shards=shards) is layout

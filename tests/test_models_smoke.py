@@ -14,6 +14,9 @@ from repro.core import (get_client_opt, get_server_opt, init_fl_state,
                         make_fl_round, make_loss)
 from repro.models import build_model
 
+# heavyweight tier: CI runs -m 'not slow' first (scripts/ci.sh)
+pytestmark = pytest.mark.slow
+
 B, S = 2, 32
 
 

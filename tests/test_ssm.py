@@ -43,6 +43,7 @@ def test_mamba2_full_vs_stepwise(zcfg, rng):
 
 @settings(max_examples=8, deadline=None)
 @given(S=st.integers(2, 70), seed=st.integers(0, 999))
+@pytest.mark.slow
 def test_mamba2_chunk_invariance(S, seed):
     """Property: output independent of chunk length."""
     cfg = get_config("zamba2-7b").reduced()
