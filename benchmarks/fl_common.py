@@ -61,7 +61,9 @@ def run_fl(opt_name: str, task_id: str, *, alpha: Optional[float] = None,
            variable_sizes: bool = False, seed: int = 0,
            engine: str = "vmap", scenario: Optional[str] = None,
            compression: Optional[str] = None,
-           error_feedback: bool = False) -> Dict:
+           error_feedback: bool = False,
+           robust_agg: Optional[str] = None,
+           quorum: Optional[int] = None) -> Dict:
     """One FL training run; returns final test accuracy + timing.
 
     ``engine="flat"`` switches Δ-SGD runs onto the packed flat-parameter
@@ -75,13 +77,26 @@ def run_fl(opt_name: str, task_id: str, *, alpha: Optional[float] = None,
     ``compression`` names a delta-compression kind (repro.compression:
     "none"/"int8"/"topk"; ``error_feedback`` adds EF21); active
     compression forces the flat engine too, and the run returns
-    wire-bytes / compression-ratio telemetry under ``"compression"``."""
+    wire-bytes / compression-ratio telemetry under ``"compression"``.
+
+    ``robust_agg`` / ``quorum`` override the scenario's robust server
+    aggregation and quorum threshold (repro.federation.faults; None =
+    keep the preset's choice — an explicit "mean" DOWNGRADES a robust
+    preset to plain averaging, which the faults suite uses to show the
+    undefended byzantine divergence). They promote a scenario-less run
+    to ``sync_iid``; faulty/robust scenarios force the flat engine."""
     scn = None
-    if scenario is not None:
+    scn_overrides = {}
+    if robust_agg is not None:
+        scn_overrides["robust_agg"] = robust_agg
+    if quorum is not None:
+        scn_overrides["quorum"] = quorum
+    if scenario is not None or scn_overrides:
         from repro.federation import get_scenario
         # run seed threaded into the scenario: multi-seed sweeps must
         # vary the cohort / K_c / staleness draws too
-        scn = get_scenario(scenario, seed=seed)
+        scn = get_scenario(scenario or "sync_iid", seed=seed,
+                           **scn_overrides)
         if alpha is None:
             alpha = scn.alpha
     comp = None
@@ -109,7 +124,9 @@ def run_fl(opt_name: str, task_id: str, *, alpha: Optional[float] = None,
     copt = get_client_opt(opt_name, **kw)
     sopt = get_server_opt(server)
     flat = False
-    if (engine == "flat" or (scn is not None and scn.is_async)
+    if (engine == "flat"
+            or (scn is not None and (scn.is_async or scn.faulty
+                                     or scn.robust or scn.quorum > 0))
             or comp_active) and opt_name == "delta_sgd":
         # pallas kernels on TPU; identical fused math via XLA elsewhere
         # (interpret-mode pallas in the round loop would distort timing)
@@ -138,7 +155,12 @@ def run_fl(opt_name: str, task_id: str, *, alpha: Optional[float] = None,
             ids_rounds.append(np.asarray(ids))
             mrows.append({k: float(metrics[k]) for k in
                           ("stale_mean", "stale_max", "k_eff_mean",
-                           "k_eff_min", "k_eff_max", "flushed")
+                           "k_eff_min", "k_eff_max", "flushed",
+                           # round-health telemetry
+                           # (repro.federation.faults)
+                           "eta_clip_rate", "nan_guard_rate",
+                           "valid_count", "round_skipped", "drop_frac",
+                           "byz_frac", "overstale_frac", "agg_clip_rate")
                           if k in metrics})
         if comp_active:
             crows.append({k: float(metrics[k]) for k in

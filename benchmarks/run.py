@@ -24,6 +24,12 @@ derived = final test accuracy unless stated).
              bandwidth_tiered per-client-level scenario, and
              interpret-mode µs/call + max-err rows for the
              quantize/dequantize/top-k kernels
+  faults   : chaos presets (repro.federation.faults) — dropouts + NaN
+             gradients (dirichlet_dropouts) and byzantine + over-stale
+             deltas (byzantine_async) under {mean, clip, trimmed}
+             aggregation, plus a clean sync_iid anchor (derived = final
+             accuracy; byzantine-under-mean rows document the
+             undefended divergence) and round-health telemetry rows
   rounds_fused: the round-fused training loop (repro.core.fed_loop) vs
              the host loop at C=128 — us/round both ways (bit-exact,
              fused-row derived = max |param diff| must be 0) plus the
@@ -406,6 +412,43 @@ def compression(rounds=None):
     emit("compression/topk_mask_64k", us, err)
 
 
+def faults(rounds=None):
+    """Chaos suite (repro.federation.faults): the two chaos scenario
+    presets — dirichlet_dropouts (mid-round dropouts + NaN gradients,
+    sync) and byzantine_async (−10x scaled deltas + over-stale updates,
+    FedBuff async) — under the RobustAgg ladder {mean, clip, trimmed},
+    next to the clean sync_iid anchor (derived = final accuracy; the
+    mean rows under byzantine corruption are EXPECTED to crater — that
+    contrast is what the suite documents, so baseline.json keeps every
+    faults row soft). The telemetry rows surface the round-health
+    counters: mean surviving clients, quorum skips, NaN-guard and
+    η-clamp trigger rates."""
+    del rounds
+    from benchmarks import fl_common
+    # cohort of 10 (participation 0.25 of 40): big enough that trimmed
+    # aggregation has a real window (t=2) and the 10% byzantine rate
+    # corrupts ~1 client per round
+    kw = dict(rounds=10, num_clients=40, participation=0.25)
+    fl_common._fed.cache_clear()
+    clean = fl_common.run_fl("delta_sgd", "easy", engine="flat",
+                             scenario="sync_iid", **kw)
+    emit("faults/clean/sync_iid/mean", clean["us_per_round"],
+         clean["acc"])
+    for scen in ("dirichlet_dropouts", "byzantine_async"):
+        for agg in ("mean", "clip", "trimmed"):
+            fl_common._fed.cache_clear()
+            r = fl_common.run_fl("delta_sgd", "easy", scenario=scen,
+                                 robust_agg=agg, **kw)
+            emit(f"faults/{scen}/{agg}", r["us_per_round"], r["acc"])
+            if agg == "clip":     # one telemetry set per preset
+                s = r["scenario"]
+                for key in ("valid_mean", "skipped_rounds",
+                            "nan_guard_rate", "eta_clip_rate"):
+                    if key in s:
+                        emit(f"faults/{scen}/{key}", r["us_per_round"],
+                             s[key])
+
+
 def rounds_fused(rounds=None):
     """Round-fused loop (repro.core.fed_loop) vs the host loop at a
     fleet-scale cohort (C=128, full participation) on the synthetic
@@ -510,6 +553,7 @@ ALL = {"table1": table1, "table2b": table2b, "table3": table3,
        "sharded": sharded,
        "scenarios": scenarios,
        "compression": compression,
+       "faults": faults,
        "rounds_fused": rounds_fused}
 
 

@@ -20,11 +20,18 @@ ap.add_argument("--batch", type=int, default=2)
 ap.add_argument("--prompt-len", type=int, default=48)
 ap.add_argument("--gen", type=int, default=16)
 ap.add_argument("--window", type=int, default=None)
+ap.add_argument("--ckpt-dir", default=None,
+                help="load params from a checkpoint (training FLState "
+                     "checkpoints work via repro.checkpoint.restore_params)")
 args = ap.parse_args()
 
 cfg = get_config(args.arch).reduced()
 model = build_model(cfg)
 params = model.init(jax.random.key(0))
+if args.ckpt_dir:
+    from repro.checkpoint import restore_params
+    params, step0 = restore_params(args.ckpt_dir, params)
+    print(f"loaded params from {args.ckpt_dir} step {step0}")
 rng = np.random.default_rng(0)
 
 batch = {"tokens": jnp.asarray(

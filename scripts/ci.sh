@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # CI: tier-1 tests (exact ROADMAP verify command) + kernels/sharded/
-# scenarios/compression benchmark smoke + benchmark-regression guard.
+# scenarios/compression/faults benchmark smoke + benchmark-regression
+# guard (faults rows are soft-baselined: repro.federation.faults).
 #
 # BENCH_GUARD=hard|soft|off (default hard): the guard compares
 # bench_results.csv against benchmarks/baseline.json — soft on the
@@ -17,6 +18,6 @@ export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
 python -m pytest -x -q -m "not slow"
 python -m pytest -x -q -m slow
 python -m benchmarks.run \
-    --only kernels,sharded,scenarios,compression,rounds_fused --quick
+    --only kernels,sharded,scenarios,compression,faults,rounds_fused --quick
 python -m benchmarks.compare bench_results.csv benchmarks/baseline.json \
     --mode "${BENCH_GUARD:-hard}"

@@ -87,6 +87,38 @@ def restore(ckpt_dir: str, like: Any, *, step: Optional[int] = None
     return jax.tree_util.tree_unflatten(treedef, leaves), step
 
 
+def restore_params(ckpt_dir: str, like_params: Any, *,
+                   step: Optional[int] = None) -> Tuple[Any, int]:
+    """Restore just the PARAMS subtree from a checkpoint holding either
+    bare params or a full FLState (the training driver saves the
+    latter): a template leaf with manifest key ``k`` matches ``k`` or
+    ``params/k``, so a serving driver can load training checkpoints
+    without reconstructing the optimizer/scenario state."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_key = {m["key"]: m for m in manifest["leaves"]}
+    tmpl_leaves, treedef = jax.tree_util.tree_flatten(like_params)
+    leaves = []
+    for (key, tmpl) in _flatten_with_paths(like_params):
+        meta = by_key.get(key) or by_key.get("params/" + key)
+        if meta is None:
+            raise KeyError(
+                f"param leaf {key!r} not in checkpoint step {step} "
+                f"(neither bare nor under 'params/'); sample keys: "
+                f"{sorted(by_key)[:4]}")
+        arr = np.load(os.path.join(d, meta["file"]))
+        if list(arr.shape) != list(np.shape(tmpl)):
+            raise ValueError(f"shape mismatch at {key}: "
+                             f"{arr.shape} vs {np.shape(tmpl)}")
+        leaves.append(jax.numpy.asarray(arr, dtype=tmpl.dtype))
+    assert len(leaves) == len(tmpl_leaves)
+    return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
 def _gc(ckpt_dir: str, keep: int):
     steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
                    if d.startswith("step_") and not d.endswith(".tmp"))

@@ -205,6 +205,11 @@ class FLConfig:
     compression: str = "none"
     compression_k_frac: float = 0.25
     error_feedback: bool = False
+    # robust server aggregation + quorum degradation (repro.federation
+    # .faults, flat engine): overrides applied onto the scenario —
+    # "mean"/0 are inert and keep the exact legacy round tail.
+    robust_agg: str = "mean"         # mean|clip|trimmed|median
+    quorum: int = 0                  # skip round when < Q valid clients
 
     @property
     def compression_spec(self):

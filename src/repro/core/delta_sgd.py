@@ -46,6 +46,16 @@ import jax.numpy as jnp
 
 from repro.core import flat as flatlib
 
+# Numerical guard ceiling on η (flat engines): Eq. (4)'s cand1 can blow
+# up when ‖∇̃f(x_k) − ∇̃f(x_{k−1})‖ underflows on a flat local landscape,
+# and a non-finite η from a corrupted gradient would poison the packed
+# (C, N) buffer irreversibly. η is clamped to this ceiling (counted per
+# client in FlatDeltaSGDState.clips) and non-finite norms drop the lane
+# to η=0 + latch FlatDeltaSGDState.valid off for the rest of the round.
+# fp32 min against a finite ceiling is exact, so healthy trajectories
+# are bit-identical with the guard on.
+ETA_CLAMP = 1e3
+
 
 class DeltaSGDState(NamedTuple):
     prev_grads: object      # pytree like params
@@ -143,6 +153,7 @@ def delta_sgd_update(params, grads, state: DeltaSGDState, *, gamma: float,
                            gamma, delta)
     eta = jnp.where(first, jnp.asarray(eta0, jnp.float32), eta)
     theta = jnp.where(first, state.theta, theta)
+    eta = jnp.minimum(eta, ETA_CLAMP)   # same ceiling as the flat engines
     grad_norm = _global_norm(grads)
     new_params = jax.tree.map(
         lambda p, g: (p.astype(jnp.float32)
@@ -162,6 +173,11 @@ class FlatDeltaSGDState(NamedTuple):
     theta: jax.Array            # (C,) η_k / η_{k-1}
     prev_grad_norm: jax.Array   # (C,)
     k: jax.Array                # local step counter (shared, resets/round)
+    # numerical-guard outcomes (None on legacy 5-field constructions):
+    valid: Optional[jax.Array] = None   # (C,) bool: lane still healthy —
+                                        # LATCHES off on a non-finite
+                                        # norm for the rest of the round
+    clips: Optional[jax.Array] = None   # (C,) int32: η-clamp hits
 
 
 def flat_delta_sgd_init(num_clients: int, layout: flatlib.FlatLayout, *,
@@ -172,7 +188,25 @@ def flat_delta_sgd_init(num_clients: int, layout: flatlib.FlatLayout, *,
         jnp.full((C,), eta0, jnp.float32),
         jnp.full((C,), theta0, jnp.float32),
         jnp.zeros((C,), jnp.float32),
-        jnp.asarray(0, jnp.int32))
+        jnp.asarray(0, jnp.int32),
+        jnp.ones((C,), bool),
+        jnp.zeros((C,), jnp.int32))
+
+
+def _guard(eta, dg_norm, grad_norm, valid_prev):
+    """In-step numerical guard: non-finite norms drop the lane (η=0 via
+    the activity mask, client excluded this round — ``valid`` latches)
+    and runaway η is clamped to ETA_CLAMP. ``jnp.minimum`` against the
+    finite ceiling and the all-True masks downstream are bit-exact
+    identities on healthy lanes, so the guard is ALWAYS on.
+
+    Returns (eta, valid, clip_hit). NaN η compares False against the
+    ceiling, so a poisoned lane counts as a NaN-guard trip, not a clip.
+    """
+    finite = jnp.isfinite(dg_norm) & jnp.isfinite(grad_norm)
+    valid = finite if valid_prev is None else (valid_prev & finite)
+    clip_hit = eta > ETA_CLAMP
+    return jnp.minimum(eta, ETA_CLAMP), valid, clip_hit
 
 
 def _mask_inactive(active, eta, theta, grad_norm, state):
@@ -225,18 +259,24 @@ def flat_delta_sgd_step(P: jax.Array, G: jax.Array,
                            gamma, delta)
     eta = jnp.where(first, jnp.asarray(eta0, jnp.float32), eta)
     theta = jnp.where(first, state.theta, theta)
-    if active is not None:
-        eta_applied, eta, theta, grad_norm = _mask_inactive(
-            active, eta, theta, grad_norm, state)
-    else:
-        eta_applied = eta
+    eta, valid, clip_hit = _guard(eta, dg_norm, grad_norm, state.valid)
+    act = valid if active is None else (active & valid)
+    eta_applied, eta, theta, grad_norm = _mask_inactive(
+        act, eta, theta, grad_norm, state)
+    clips = (jnp.zeros_like(valid, jnp.int32) if state.clips is None
+             else state.clips) + (clip_hit & act).astype(jnp.int32)
+    # sanitize: η=0 alone can't stop a NaN gradient (0·NaN = NaN in the
+    # apply), so invalid lanes are zeroed before both the apply and the
+    # prev_grads roll. where(True, G, 0) is G bitwise on healthy lanes,
+    # and it is an XLA select — the step stays at two kernel launches.
+    G_safe = jnp.where(valid[:, None], G, jnp.float32(0.0))
     if backend == "pallas":
-        new_P = k.batched_apply(P, G, eta_applied, mask=mask,
+        new_P = k.batched_apply(P, G_safe, eta_applied, mask=mask,
                                 interpret=interpret)
     else:
-        new_P = kref.batched_apply_ref(P, G, eta_applied, mask)
-    return new_P, FlatDeltaSGDState(G, eta, theta, grad_norm,
-                                    state.k + 1)
+        new_P = kref.batched_apply_ref(P, G_safe, eta_applied, mask)
+    return new_P, FlatDeltaSGDState(G_safe, eta, theta, grad_norm,
+                                    state.k + 1, valid, clips)
 
 
 # --------------------------------------------------------------------------
@@ -295,7 +335,8 @@ def flat_delta_sgd_step_sharded(P: jax.Array, G: jax.Array,
     with_mask = mask is not None
     with_active = active is not None
 
-    def local_step(P_l, G_l, Gp_l, eta, theta, pgn, k_ctr, *rest):
+    def local_step(P_l, G_l, Gp_l, eta, theta, pgn, k_ctr, valid_p,
+                   clips_p, *rest):
         rest = list(rest)
         mask_l = rest.pop(0) if with_mask else None
         active_l = rest.pop(0) if with_active else None
@@ -316,29 +357,38 @@ def flat_delta_sgd_step_sharded(P: jax.Array, G: jax.Array,
         first = (k_ctr == 0)
         eta_n = jnp.where(first, jnp.asarray(eta0, jnp.float32), eta_n)
         theta_n = jnp.where(first, theta, theta_n)
-        if active_l is not None:
-            st = FlatDeltaSGDState(Gp_l, eta, theta, pgn, k_ctr)
-            eta_applied, eta_n, theta_n, grad_norm = _mask_inactive(
-                active_l, eta_n, theta_n, grad_norm, st)
-        else:
-            eta_applied = eta_n
+        eta_n, valid_n, clip_hit = _guard(eta_n, dg_norm, grad_norm,
+                                          valid_p)
+        act = valid_n if active_l is None else (active_l & valid_n)
+        st = FlatDeltaSGDState(Gp_l, eta, theta, pgn, k_ctr)
+        eta_applied, eta_n, theta_n, grad_norm = _mask_inactive(
+            act, eta_n, theta_n, grad_norm, st)
+        clips_n = clips_p + (clip_hit & act).astype(jnp.int32)
+        G_safe = jnp.where(valid_n[:, None], G_l, jnp.float32(0.0))
         if backend == "pallas":
-            new_P = k.batched_apply(P_l, G_l, eta_applied, mask=mask_l,
+            new_P = k.batched_apply(P_l, G_safe, eta_applied, mask=mask_l,
                                     interpret=interpret)
         else:
-            new_P = kref.batched_apply_ref(P_l, G_l, eta_applied, mask_l)
-        return new_P, eta_n, theta_n, grad_norm
+            new_P = kref.batched_apply_ref(P_l, G_safe, eta_applied,
+                                           mask_l)
+        return new_P, G_safe, eta_n, theta_n, grad_norm, valid_n, clips_n
 
+    C = P.shape[0]
+    valid = (state.valid if state.valid is not None
+             else jnp.ones((C,), bool))
+    clips = (state.clips if state.clips is not None
+             else jnp.zeros((C,), jnp.int32))
     ins = [P, G, state.prev_grads, state.eta, state.theta,
-           state.prev_grad_norm, state.k]
-    specs = [buf, buf, buf, vec, vec, vec, rep]
+           state.prev_grad_norm, state.k, valid, clips]
+    specs = [buf, buf, buf, vec, vec, vec, rep, vec, vec]
     if with_mask:
         ins.append(mask)
         specs.append(PS(na))
     if with_active:
         ins.append(active)
         specs.append(vec)
-    fn = _shard_map(local_step, mesh, tuple(specs), (buf, vec, vec, vec))
-    new_P, eta, theta, grad_norm = fn(*ins)
-    return new_P, FlatDeltaSGDState(G, eta, theta, grad_norm,
-                                    state.k + 1)
+    fn = _shard_map(local_step, mesh, tuple(specs),
+                    (buf, buf, vec, vec, vec, vec, vec))
+    new_P, G_safe, eta, theta, grad_norm, valid, clips = fn(*ins)
+    return new_P, FlatDeltaSGDState(G_safe, eta, theta, grad_norm,
+                                    state.k + 1, valid, clips)

@@ -214,6 +214,13 @@ def make_fl_round(loss_fn, client_opt: ClientOpt, server_opt: ServerOpt, *,
             "async buffered aggregation requires the flat engine "
             "(flat=...): the staleness-weighted delta merge is one "
             "reduction over the packed (C, N) buffer")
+    if scenario is not None and not flat and (
+            scenario.faulty or scenario.robust or scenario.quorum > 0):
+        raise ValueError(
+            "fault injection / robust aggregation / quorum degradation "
+            "require the flat engine (flat=...): faults are lowered as "
+            "per-client lanes on the packed (C, N) buffer and the "
+            "RobustAgg ladder runs on it (repro.federation.faults)")
     if compression is not None or (
             scenario is not None and scenario.bandwidth_heterogeneous):
         # a bandwidth-heterogeneous scenario implies compression even if
@@ -352,6 +359,17 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
                            and compression.active(scenario)) else None
     use_ef = comp is not None and comp.error_feedback
 
+    # fault / robustness axis (repro.federation.faults). All trace-time
+    # flags: with everything off, every branch below is the exact legacy
+    # code path, so the fault-free mean configuration stays bit-exact
+    # against the golden trajectories by construction.
+    fm = scenario.fault_model if scenario is not None else None
+    faults_on = fm is not None and fm.active
+    ragg = scenario.robust_model if scenario is not None else None
+    robust_on = ragg is not None and ragg.robust
+    quorum = scenario.quorum if scenario is not None else 0
+    guard_tail = faults_on or robust_on or quorum > 0
+
     sharded = mesh is not None
     if sharded:
         from jax.sharding import NamedSharding, PartitionSpec as PS
@@ -414,6 +432,23 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
         rep = (lambda x: constrain(x, _PS())) if sharded else (lambda x: x)
         step_counts = (rep(scenario.draw_step_counts(fstate.round, C, K))
                        if hetero else None)
+        # fault lanes (repro.federation.faults): one deterministic draw
+        # per round off axis 4 of the round key, replicated like every
+        # other scenario draw. Drops fold into the SAME per-step lane
+        # mask heterogeneous K uses — a dropped client simply runs out
+        # of budget at its drop step — so the scan stays fixed-shape and
+        # the step stays at two kernel launches.
+        lanes = (jax.tree.map(rep, scenario.draw_faults(fstate.round, C, K))
+                 if faults_on else None)
+        drops_on = faults_on and fm.drop_rate > 0.0
+        if drops_on:
+            budget = (jnp.minimum(step_counts, lanes.drop_step)
+                      if hetero else lanes.drop_step)
+            # loss metrics mask on the effective budget; clamp ≥ 1 so a
+            # step-0 drop (K=1) still indexes a defined "last step"
+            mcounts = jnp.maximum(budget, 1)
+        else:
+            budget = mcounts = step_counts
 
         # broadcast the round-start params to the client axis; the carry
         # is already flat, so no per-round pytree re-pack happens here
@@ -428,14 +463,17 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
             P = constrain(flatlib.pack_batched(bcast, layout), pspec)
         else:
             P = jnp.broadcast_to(fstate.P[None], (C, layout.padded_size))
-        P_start = P if (is_async or comp is not None) else None
+        P_start = P if (is_async or comp is not None or guard_tail) \
+            else None
         S = flat_delta_sgd_init(C, layout, eta0=eta0, theta0=theta0)
         if sharded:
             S = S._replace(prev_grads=constrain(S.prev_grads, pspec),
                            eta=constrain(S.eta, cspec),
                            theta=constrain(S.theta, cspec),
                            prev_grad_norm=constrain(S.prev_grad_norm,
-                                                    cspec))
+                                                    cspec),
+                           valid=constrain(S.valid, cspec),
+                           clips=constrain(S.clips, cspec))
 
         # scan over local steps: batches (C, K, ...) -> (K, C, ...)
         batches_t = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1),
@@ -451,7 +489,15 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
                                   else None)
             )(params_c, batch_k, gp, prev_local_params)
             G = constrain(flatlib.pack_batched(g, layout), pspec)
-            active = (k_idx < step_counts) if hetero else None
+            if faults_on and fm.nan_rate > 0.0:
+                # NaN/Inf gradient corruption: from the drawn step on,
+                # the client's packed lanes go non-finite. Injected on
+                # the WIRE side of the guard — the in-step guard must
+                # catch it (valid latches off, η=0, lane sanitized).
+                bad = k_idx >= lanes.nan_step
+                G = constrain(jnp.where(bad[:, None],
+                                        jnp.float32(jnp.nan), G), pspec)
+            active = (k_idx < budget) if budget is not None else None
             P, S = flat_step(P, G, S, mask, active)
             return (P, S), l
 
@@ -463,6 +509,26 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
 
         extra = _scenario_extras(scenario, fstate.round, C, num_clients,
                                  client_sizes, step_counts, rep=rep)
+        # numerical-guard telemetry (always on for the flat engines):
+        # how often η hit the ETA_CLAMP ceiling, and what fraction of
+        # lanes the NaN guard dropped this round
+        extra.update(
+            eta_clip_rate=(jnp.sum(S.clips.astype(jnp.float32))
+                           / jnp.float32(C * K)),
+            nan_guard_rate=jnp.mean((~S.valid).astype(jnp.float32)))
+
+        # survivor mask + byzantine factor for the fault/robust tails:
+        # a client is excluded when its NaN guard latched, it dropped
+        # mid-round, or (async, below) its update arrived over-stale
+        byz = valid = None
+        if guard_tail:
+            valid = S.valid
+            if drops_on:
+                valid = valid & (lanes.drop_step >= K)
+            if faults_on and fm.byzantine_rate > 0.0:
+                byz = jnp.where(lanes.byzantine,
+                                jnp.float32(fm.byzantine_scale),
+                                jnp.float32(1.0))
 
         # delta compression (repro.compression): compress each client's
         # round delta before ANY aggregation — only the reconstructed
@@ -477,6 +543,11 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
             levels = (rep(scenario.draw_compression_levels(fstate.round, C))
                       if bw_hetero else None)
             delta = P - P_start
+            if byz is not None:
+                # byzantine corruption happens CLIENT-side, before the
+                # (honest) compression transport — the server only ever
+                # sees the reconstructed corrupted delta
+                delta = delta * byz[:, None]
             if use_ef:
                 if fstate.ef is None:
                     raise ValueError(
@@ -520,7 +591,7 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
             delta_hat = None
             P_agg = P
 
-        if not is_async:
+        if not is_async and not guard_tail:
             # aggregate: single (weighted) mean over the packed client
             # axis — under the sharded engine XLA lowers this to the
             # FedAvg all-reduce over the client mesh axes; the (N,)
@@ -539,7 +610,70 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
             new_fstate = FlatFLState(
                 pack1(new_params), sstate, fstate.round + 1,
                 fstate.buffer, fstate.ef if new_ef is None else new_ef)
-        else:
+        elif not is_async:
+            # fault/robust synchronous tail: the server works in DELTA
+            # space — the RobustAgg ladder (repro.federation.faults)
+            # aggregates the survivors' deltas (clip / trimmed / median /
+            # valid-masked mean) and the result re-anchors on the round-
+            # start params. Under meshes the ladder runs inside
+            # shard_map before/with the client-mean psum, so only (N_loc,)
+            # aggregates ever cross the client shard boundary.
+            from repro.federation.faults import (robust_aggregate,
+                                                 robust_aggregate_sharded)
+            delta_eff = delta_hat if comp is not None else (P - P_start)
+            if byz is not None and comp is None:
+                delta_eff = delta_eff * byz[:, None]
+            w_raw = (client_weights.astype(jnp.float32)
+                     if weighted and client_weights is not None else None)
+            if sharded:
+                agg_delta, rinfo = robust_aggregate_sharded(
+                    delta_eff, ragg, valid, mesh=mesh, pspec=pspec,
+                    weights=w_raw)
+            else:
+                agg_delta, rinfo = robust_aggregate(
+                    delta_eff, ragg, valid, weights=w_raw,
+                    backend=backend)
+            n_valid = jnp.sum(valid.astype(jnp.float32))
+            # round-start flat params: the replicated engines carry them
+            # exactly in the flat state; sharded re-derives them from the
+            # (identical-row) broadcast buffer to stay on nspec sharding
+            P0 = (constrain(jnp.mean(P_start, axis=0), nspec)
+                  if sharded else fstate.P)
+            agg = flatlib.unpack(constrain(P0 + agg_delta, nspec), layout)
+
+            def do_update(_):
+                p, s = server_opt.update(gp, agg, fstate.server_state)
+                return pack1(p), s
+
+            def skip_update(_):
+                return fstate.P, fstate.server_state
+
+            if quorum > 0:
+                # quorum degradation: with < Q valid clients the round
+                # is a no-op carrying the previous params/server state
+                skipped = n_valid < quorum
+                newP, sstate = jax.lax.cond(skipped, skip_update,
+                                            do_update, None)
+                if new_ef is not None:
+                    new_ef = jnp.where(skipped, E, new_ef)
+            else:
+                skipped = jnp.asarray(False)
+                newP, sstate = do_update(None)
+            metrics = _round_metrics(losses, S.eta, mcounts)
+            extra.update(rinfo)
+            extra.update(valid_count=n_valid,
+                         round_skipped=skipped.astype(jnp.float32))
+            if drops_on:
+                extra["drop_frac"] = jnp.mean(
+                    (lanes.drop_step < K).astype(jnp.float32))
+            if byz is not None:
+                extra["byz_frac"] = jnp.mean(
+                    lanes.byzantine.astype(jnp.float32))
+            metrics.update(extra)
+            new_fstate = FlatFLState(
+                newP, sstate, fstate.round + 1, fstate.buffer,
+                fstate.ef if new_ef is None else new_ef)
+        elif not guard_tail:
             # FedBuff-style async aggregation: one staleness-weighted
             # reduction over the packed client axis produces the cohort's
             # delta sum; the server only steps when the buffer holds M
@@ -571,6 +705,82 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
             metrics.update(extra)
             new_fstate = FlatFLState(pack1(params), sstate,
                                      fstate.round + 1, buf,
+                                     fstate.ef if new_ef is None else new_ef)
+        else:
+            # fault/robust async tail: over-stale updates are REJECTED
+            # by the server (valid &= fresh enough), the RobustAgg
+            # ladder aggregates the survivors' deltas, and the buffer
+            # accumulates the robust mean scaled back to Σ wΔ form so
+            # the flush's Σ wΔ / Σ w recovers it. Quorum failures skip
+            # the merge entirely (buffer, params, server state frozen).
+            from repro.federation.buffer import (buffer_merge, buffer_step,
+                                                 staleness_weights)
+            from repro.federation.faults import (robust_aggregate,
+                                                 robust_aggregate_sharded)
+            stale = rep(scenario.draw_staleness(fstate.round, C))
+            if faults_on and fm.overstale_rate > 0.0:
+                stale = jnp.where(lanes.overstale,
+                                  jnp.int32(fm.overstale), stale)
+            valid = valid & (stale <= scenario.staleness_max)
+            w = staleness_weights(stale, scenario.staleness_exp)
+            if weighted and client_weights is not None:
+                w = w * client_weights.astype(jnp.float32)
+            d = delta_hat if comp is not None else (P - P_start)
+            if byz is not None and comp is None:
+                d = d * byz[:, None]
+            if sharded:
+                rob, rinfo = robust_aggregate_sharded(
+                    d, ragg, valid, mesh=mesh, pspec=pspec, weights=w)
+            else:
+                rob, rinfo = robust_aggregate(d, ragg, valid, weights=w,
+                                              backend=backend)
+            vf = valid.astype(jnp.float32)
+            wsum = jnp.sum(w * vf)
+            n_valid = jnp.sum(vf)
+            delta_flat = rob * wsum
+            delta_tree = flatlib.unpack(constrain(delta_flat, nspec),
+                                        layout, cast=False)
+
+            def do_round(_):
+                buf = buffer_merge(fstate.buffer, delta_tree, wsum,
+                                   n_valid.astype(jnp.int32), stale)
+                params, sstate, buf, flushed = buffer_step(
+                    gp, fstate.server_state, buf, server_opt,
+                    scenario.buffer_size)
+                return pack1(params), sstate, buf, flushed
+
+            def skip_round(_):
+                return (fstate.P, fstate.server_state, fstate.buffer,
+                        jnp.float32(0.0))
+
+            if quorum > 0:
+                skipped = n_valid < quorum
+                newP, sstate, buf, flushed = jax.lax.cond(
+                    skipped, skip_round, do_round, None)
+                if new_ef is not None:
+                    new_ef = jnp.where(skipped, E, new_ef)
+            else:
+                skipped = jnp.asarray(False)
+                newP, sstate, buf, flushed = do_round(None)
+            metrics = _round_metrics(losses, S.eta, mcounts)
+            sf = stale.astype(jnp.float32)
+            extra.update(stale_mean=jnp.mean(sf), stale_max=jnp.max(sf),
+                         buffer_fill=buf.count.astype(jnp.float32),
+                         flushed=flushed)
+            extra.update(rinfo)
+            extra.update(valid_count=n_valid,
+                         round_skipped=skipped.astype(jnp.float32))
+            if drops_on:
+                extra["drop_frac"] = jnp.mean(
+                    (lanes.drop_step < K).astype(jnp.float32))
+            if byz is not None:
+                extra["byz_frac"] = jnp.mean(
+                    lanes.byzantine.astype(jnp.float32))
+            if faults_on and fm.overstale_rate > 0.0:
+                extra["overstale_frac"] = jnp.mean(
+                    lanes.overstale.astype(jnp.float32))
+            metrics.update(extra)
+            new_fstate = FlatFLState(newP, sstate, fstate.round + 1, buf,
                                      fstate.ef if new_ef is None else new_ef)
 
         return new_fstate, metrics, P

@@ -8,12 +8,19 @@ heterogeneity, and async buffered aggregation (see ROADMAP §Scenarios).
                   lowered as per-step lane masks on the flat engine.
   buffer        — FedBuff-style server-side delta buffer with staleness-
                   weighted merges into any ServerOpt.
-  scenarios     — named presets bundling all three axes, threaded through
+  faults        — deterministic fault injection (drops, NaN grads,
+                  byzantine deltas, over-staleness) + the RobustAgg
+                  server-aggregation ladder (mean/clip/trimmed/median).
+  scenarios     — named presets bundling all axes, threaded through
                   FLConfig / fed_round / launch / benchmarks.
 """
 from repro.federation.buffer import (AsyncBufferState, buffer_init,
                                      buffer_merge, buffer_step,
                                      staleness_weights)
+from repro.federation.faults import (ROBUST_AGG_KINDS, FaultLanes,
+                                     FaultModel, RobustAgg,
+                                     robust_aggregate,
+                                     robust_aggregate_sharded)
 from repro.federation.heterogeneity import (SPEED_MODELS, SpeedModel,
                                             active_mask, step_active)
 from repro.federation.schedulers import (SCHEDULERS, CyclicScheduler,
@@ -28,5 +35,6 @@ __all__ = [
     "step_active", "SCHEDULERS", "Scheduler", "UniformScheduler",
     "SizeWeightedScheduler", "ZipfScheduler", "CyclicScheduler",
     "cohort_size", "make_scheduler", "SCENARIOS", "Scenario",
-    "get_scenario",
+    "get_scenario", "ROBUST_AGG_KINDS", "FaultLanes", "FaultModel",
+    "RobustAgg", "robust_aggregate", "robust_aggregate_sharded",
 ]

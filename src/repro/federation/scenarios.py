@@ -23,6 +23,14 @@ Presets (the scenario table in README §Federation scenarios):
   cyclic_hetero        cyclic window   U{K/4..K}      sync         fixed
   zipf_async           zipf (s=1.2)    U{K/4..K}      async M=8    fixed
   bandwidth_tiered     uniform         fixed K_max    sync         tiered
+  dirichlet_dropouts   uniform         30% stragglers sync (α=0.1) fixed
+  byzantine_async      zipf (s=1.2)    U{K/4..K}      async M=8    fixed
+
+The last two are the CHAOS presets, adding the FAULT axis
+(repro.federation.faults): ``dirichlet_dropouts`` loses 30% of each
+cohort mid-round and corrupts 5% with NaN gradients (quorum Q=2);
+``byzantine_async`` flips/scales 10% of deltas by −10× and over-stales
+10% of async updates, defended by clip aggregation (quorum Q=2).
 
 ``sync_iid`` is the exact seed configuration: fixed speed emits no masks
 and sync aggregation takes the unmodified round tail, so it reproduces
@@ -37,6 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.compression.spec import LEVELS
+from repro.federation.faults import FaultLanes, FaultModel, RobustAgg
 from repro.federation.heterogeneity import SpeedModel
 from repro.federation.schedulers import make_scheduler
 
@@ -69,6 +78,20 @@ class Scenario:
     # well-connected clients, mostly int8, a top-k tail).
     bandwidth: str = "fixed"         # fixed|uniform|tiered
     tier_probs: tuple = (0.2, 0.5, 0.3)
+    # fault axis (repro.federation.faults): per-round, per-client fault
+    # draws. All rates default to 0 — the fault-free configuration lowers
+    # to the exact legacy round tail.
+    drop_rate: float = 0.0           # P(client drops mid-round)
+    nan_rate: float = 0.0            # P(client grads go NaN/Inf)
+    byzantine_rate: float = 0.0      # P(delta corrupted by scale below)
+    byzantine_scale: float = -10.0
+    overstale_rate: float = 0.0      # P(async update over-stale)
+    overstale: int = 16              # staleness forced on those updates
+    # robust server aggregation + graceful degradation
+    robust_agg: str = "mean"         # mean|clip|trimmed|median
+    clip_norm: float = 10.0          # robust_agg="clip": max ‖Δ_c‖₂
+    trim_frac: float = 0.2           # robust_agg="trimmed": cut per end
+    quorum: int = 0                  # skip round when < Q valid clients
     # data hint consumed by drivers/benchmarks (not by the round engine)
     alpha: Optional[float] = None
     seed: int = 0
@@ -83,7 +106,11 @@ class Scenario:
                 f"tier_probs must have one entry per compression level "
                 f"(repro.compression.LEVELS, {_NUM_LEVELS}), got "
                 f"{len(self.tier_probs)}")
+        if self.quorum < 0:
+            raise ValueError(f"quorum must be >= 0, got {self.quorum}")
         SpeedModel(self.speed)  # validates the kind
+        self.fault_model        # validates rates
+        self.robust_model       # validates kind/clip_norm/trim_frac
 
     # ---- derived models -------------------------------------------------
     @property
@@ -102,6 +129,28 @@ class Scenario:
     @property
     def bandwidth_heterogeneous(self) -> bool:
         return self.bandwidth != "fixed"
+
+    @property
+    def fault_model(self) -> FaultModel:
+        return FaultModel(drop_rate=self.drop_rate,
+                          nan_rate=self.nan_rate,
+                          byzantine_rate=self.byzantine_rate,
+                          byzantine_scale=self.byzantine_scale,
+                          overstale_rate=self.overstale_rate,
+                          overstale=self.overstale)
+
+    @property
+    def faulty(self) -> bool:
+        return self.fault_model.active
+
+    @property
+    def robust_model(self) -> RobustAgg:
+        return RobustAgg(kind=self.robust_agg, clip_norm=self.clip_norm,
+                         trim_frac=self.trim_frac)
+
+    @property
+    def robust(self) -> bool:
+        return self.robust_model.robust
 
     def make_scheduler(self, num_clients: int, cohort: int, sizes=None):
         return make_scheduler(self.scheduler, num_clients=num_clients,
@@ -142,6 +191,13 @@ class Scenario:
         return jax.random.categorical(
             key, logits, shape=(num_clients,)).astype(jnp.int32)
 
+    def draw_faults(self, round_idx, num_clients: int,
+                    k_max: int) -> FaultLanes:
+        """Per-client fault lanes for the round (axis 4 of the round
+        key, next to step counts=1 / staleness=2 / bandwidth=3)."""
+        key = jax.random.fold_in(self.round_key(round_idx), 4)
+        return self.fault_model.draw(key, num_clients, k_max)
+
 
 SCENARIOS: Dict[str, Scenario] = {s.name: s for s in (
     Scenario("sync_iid", alpha=1.0),
@@ -152,6 +208,11 @@ SCENARIOS: Dict[str, Scenario] = {s.name: s for s in (
     Scenario("zipf_async", scheduler="zipf", speed="uniform",
              aggregation="async", buffer_size=8),
     Scenario("bandwidth_tiered", bandwidth="tiered"),
+    Scenario("dirichlet_dropouts", speed="stragglers", alpha=0.1,
+             drop_rate=0.3, nan_rate=0.05, quorum=2),
+    Scenario("byzantine_async", scheduler="zipf", speed="uniform",
+             aggregation="async", buffer_size=8, byzantine_rate=0.1,
+             overstale_rate=0.1, robust_agg="clip", quorum=2),
 )}
 
 

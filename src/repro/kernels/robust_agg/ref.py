@@ -1,0 +1,15 @@
+"""jnp reference for the robust-aggregation kernel (parity oracle)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def batched_trimmed_mean_ref(x: jax.Array, t: int) -> jax.Array:
+    """Coordinate-wise trimmed mean of (C, N) -> (N,): sort the client
+    axis, cut ``t`` per end, average — plain ``jnp.sort``."""
+    C = x.shape[0]
+    if not 0 <= 2 * t < C:
+        raise ValueError(f"trim count {t} leaves no window for C={C}")
+    s = jnp.sort(x.astype(jnp.float32), axis=0)
+    return jnp.mean(s[t:C - t], axis=0)

@@ -1,0 +1,126 @@
+"""Pallas TPU kernel for fused robust server aggregation.
+
+Coordinate-wise trimmed mean / median over the packed ``(C, N)`` client
+delta buffer (repro.federation.faults): per flat coordinate, sort the C
+client values, cut ``t`` at each end, average the surviving window. The
+kernel fuses sort + trim + mean into ONE HBM pass over the buffer — the
+same launch discipline as the Δ-SGD pair (repro.kernels.delta_sgd),
+with the same lane-aligned (C, N) → (C, M·128) tiling and a 1-D grid
+over row blocks.
+
+The sort is a BITONIC NETWORK along the client axis: C is padded to the
+next power of two with +inf rows (which sort past every real value, so
+the window [t, C−t) never sees them) and each compare-exchange stage is
+a vectorized ``jnp.minimum``/``jnp.maximum`` pair over a static reshape
+— no ``lax.sort``, no gathers, nothing Mosaic can't lower. For
+fleet-scale C the network costs O(log² C) vector passes over a block
+that is already resident in VMEM, so the kernel stays HBM-bound like
+the rest of the flat engine.
+
+``ref.py`` carries the ``jnp.sort`` oracle the kernel is parity-tested
+against.
+"""
+from __future__ import annotations
+
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.flat import BLOCK_ROWS, LANES
+
+# trace-time launch accounting, one Counter per kernel module — the
+# Δ-SGD 2-launches-per-step invariant counts ITS module's launches, so
+# the aggregation kernel keeps its own book.
+LAUNCHES: Counter = Counter()
+
+
+def reset_launch_count() -> None:
+    LAUNCHES.clear()
+
+
+def launch_count() -> int:
+    return sum(LAUNCHES.values())
+
+
+def _bitonic_sort_axis0(x: jax.Array) -> jax.Array:
+    """Ascending bitonic sort along axis 0 (length must be a power of
+    two). Every stage is a static reshape + min/max compare-exchange —
+    the direction bit of a pair only depends on bits ABOVE the stage
+    stride, so it broadcasts from the leading group axis."""
+    P2 = x.shape[0]
+    tail = x.shape[1:]
+    k = 2
+    while k <= P2:
+        s = k // 2
+        while s >= 1:
+            groups = P2 // (2 * s)
+            y = x.reshape((groups, 2, s) + tail)
+            lo, hi = y[:, 0], y[:, 1]
+            mn = jnp.minimum(lo, hi)
+            mx = jnp.maximum(lo, hi)
+            base = jnp.arange(groups) * (2 * s)
+            asc = ((base & k) == 0).reshape((groups,) + (1,) * (1 + len(tail)))
+            first = jnp.where(asc, mn, mx)
+            second = jnp.where(asc, mx, mn)
+            x = jnp.stack([first, second], axis=1).reshape((P2,) + tail)
+            s //= 2
+        k *= 2
+    return x
+
+
+def _next_pow2(c: int) -> int:
+    p = 1
+    while p < c:
+        p *= 2
+    return p
+
+
+def _make_trimmed_kernel(c: int, t: int):
+    def kernel(x_ref, out_ref):
+        xs = _bitonic_sort_axis0(x_ref[...].astype(jnp.float32))
+        # pad rows are +inf and sort past index c−1; the surviving
+        # window [t, c−t) is all real values
+        win = xs[t:c - t]
+        out_ref[...] = jnp.sum(win, axis=0) / jnp.float32(c - 2 * t)
+    return kernel
+
+
+def _grid_shapes(n: int):
+    """(M, rows, blocks) for a lane-aligned flat length n — same
+    geometry contract as the Δ-SGD kernels (FlatLayout pre-pads)."""
+    assert n % LANES == 0, f"flat length {n} not lane-aligned"
+    m = n // LANES
+    rows = min(BLOCK_ROWS, m)
+    assert m % rows == 0, f"flat length {n} not row-block aligned"
+    return m, rows, m // rows
+
+
+def batched_trimmed_mean(x: jax.Array, t: int, *,
+                         interpret: bool = False) -> jax.Array:
+    """Coordinate-wise trimmed mean over the packed (C, N) buffer:
+    sort the C client values per coordinate, drop ``t`` at each end,
+    average the rest. ONE pallas launch for all coordinates. Invalid
+    clients must already be zeroed by the caller (the zero delta is the
+    'no contribution' element — repro.federation.faults documents the
+    semantics). ``t = (C−1)//2`` gives the coordinate-wise median."""
+    C, n = x.shape
+    if not 0 <= 2 * t < C:
+        raise ValueError(f"trim count {t} leaves no window for C={C}")
+    m, rows, blocks = _grid_shapes(n)
+    P2 = _next_pow2(C)
+    x3 = x.astype(jnp.float32).reshape(C, m, LANES)
+    if P2 > C:
+        x3 = jnp.concatenate(
+            [x3, jnp.full((P2 - C, m, LANES), jnp.inf, jnp.float32)])
+    LAUNCHES["batched_trimmed_mean"] += 1
+    out = pl.pallas_call(
+        _make_trimmed_kernel(C, t),
+        grid=(blocks,),
+        in_specs=[pl.BlockSpec((P2, rows, LANES), lambda j: (0, j, 0))],
+        out_specs=pl.BlockSpec((rows, LANES), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, LANES), jnp.float32),
+        interpret=interpret,
+    )(x3)
+    return out.reshape(n)

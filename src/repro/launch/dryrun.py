@@ -348,11 +348,14 @@ def lower_one(arch: str, shape_id: str, multi_pod: bool, *,
 def scenario_smoke(verbose: bool = True):
     """CI scenario leg: compile the flat_fed_hetero / flat_fed_async /
     flat_fed_compressed rounds — plus the round-fused R-round scan
-    (flat_fed_rounds_fused, repro.core.fed_loop) — of a reduced config
-    on an 8-virtual-device (4, 2) host mesh and assert the packed (C, N)
-    buffer stays sharded under every variant; the compressed variant
-    additionally asserts no full-precision client delta crosses the
-    client shard boundary (the production-mesh versions run via
+    (flat_fed_rounds_fused, repro.core.fed_loop) and the chaos variant
+    flat_fed_faults (repro.federation.faults: dropouts + NaN + byzantine
+    under trimmed aggregation and quorum) — of a reduced config on an
+    8-virtual-device (4, 2) host mesh and assert the packed (C, N)
+    buffer stays sharded under every variant; the compressed variants
+    additionally assert no full-precision client delta crosses the
+    client shard boundary, with the TIGHTENED ``2*n_loc`` payload bound
+    on the robust round (the production-mesh versions run via
     ``launch/perf.py --variants flat_fed_hetero,flat_fed_async,
     flat_fed_compressed,flat_fed_rounds_fused``)."""
     from repro.configs.base import ShapeConfig
@@ -371,20 +374,32 @@ def scenario_smoke(verbose: bool = True):
     pstruct = jax.eval_shape(model.init, jax.random.key(0))
     layout = flatlib.layout_of(pstruct, shards=spec.flat_shards(mesh))
     from repro.compression import CompressionSpec
-    for variant, scn, comp, rpc in (
-            ("flat_fed_hetero", "dirichlet_stragglers", None, 1),
-            ("flat_fed_async", "zipf_async", None, 1),
+    from repro.federation import get_scenario
+    # chaos variant: mid-round dropouts + NaN corruption + byzantine
+    # scaling defended by trimmed aggregation under quorum Q=2, stacked
+    # on int8+EF compression (repro.federation.faults)
+    faults_scn = get_scenario("dirichlet_dropouts", robust_agg="trimmed",
+                              quorum=2, byzantine_rate=0.1)
+    n_loc = layout.padded_size // spec.flat_shards(mesh)
+    for variant, scn, comp, rpc, cmul in (
+            ("flat_fed_hetero", "dirichlet_stragglers", None, 1, 1),
+            ("flat_fed_async", "zipf_async", None, 1, 1),
             # error_feedback=True allocates FLState.ef, so the compiled
             # program (and both HLO assertions) covers the EF sharding
             ("flat_fed_compressed", "bandwidth_tiered",
-             CompressionSpec(kind="int8", error_feedback=True), 1),
+             CompressionSpec(kind="int8", error_feedback=True), 1, 2),
             # round-fused loop (repro.core.fed_loop): the sharded-buffer
             # assertion must hold on the SCANNED computation too
-            ("flat_fed_rounds_fused", "dirichlet_stragglers", None, 4)):
-        # the compressed variant stacks 2 clients per client shard so
+            ("flat_fed_rounds_fused", "dirichlet_stragglers", None, 4, 1),
+            # chaos smoke: 4 clients per client shard, so the TIGHTENED
+            # 2*n_loc robust-round bound sits strictly below the default
+            # (C_loc, N_loc) slab bound and actually bites
+            ("flat_fed_faults", faults_scn,
+             CompressionSpec(kind="int8", error_feedback=True), 1, 4)):
+        # the compressed variants stack >= 2 clients per client shard so
         # the boundary assertion can tell a leaked full-precision delta
         # slab (C_loc, N_loc) from the legitimate (N_loc,) client mean
-        C = spec.clients_on(mesh) * (2 if comp is not None else 1)
+        C = spec.clients_on(mesh) * cmul
         t0 = time.time()
         compiled, *_ = _compile_step(cfg, shape, mesh, spec, fl,
                                      unroll=False, remat=False,
@@ -394,14 +409,17 @@ def scenario_smoke(verbose: bool = True):
         rep = assert_flat_buffer_sharded(compiled, C, layout.padded_size)
         extra = ""
         if comp is not None:
+            kw = ({"max_payload_elems": 2 * n_loc}
+                  if variant == "flat_fed_faults" else {})
             brep = assert_no_fullprec_delta_collective(
                 compiled, C, layout.padded_size, mesh=mesh,
-                federation=spec)
+                federation=spec, **kw)
             extra = (f", no full-precision delta over the client "
                      f"boundary ({brep['collectives']} collectives "
                      f"checked)")
         if verbose:
-            print(f"[scenario-smoke] {variant} ({scn}): compiled in "
+            sname = scn if isinstance(scn, str) else scn.name
+            print(f"[scenario-smoke] {variant} ({sname}): compiled in "
                   f"{time.time() - t0:.1f}s, ({C}, {layout.padded_size}) "
                   f"flat buffer stays sharded "
                   f"(gather/copy={rep['gather_or_copy']}){extra}",
@@ -424,10 +442,10 @@ def main():
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--scenario-smoke", action="store_true",
                     help="compile flat_fed_hetero + flat_fed_async + "
-                         "flat_fed_compressed + flat_fed_rounds_fused on "
-                         "an 8-virtual-device mesh and check the sharded-"
-                         "buffer + compressed-boundary HLO assertions "
-                         "(CI scenario leg)")
+                         "flat_fed_compressed + flat_fed_rounds_fused + "
+                         "flat_fed_faults on an 8-virtual-device mesh and "
+                         "check the sharded-buffer + compressed-boundary "
+                         "HLO assertions (CI scenario leg)")
     args = ap.parse_args()
 
     if args.scenario_smoke:

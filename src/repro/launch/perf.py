@@ -47,6 +47,11 @@ Variants:
                rounds as ONE jitted lax.scan on the sharded flat
                engine, donated carry; sharded-buffer HLO assertion on
                the scanned computation
+  flat_fed_faults
+               chaos round (repro.federation.faults): deterministic
+               dropouts + NaN corruption + byzantine scaling under
+               trimmed robust aggregation with quorum, on int8+EF
+               compression; both HLO assertions as flat_fed_compressed
 """
 import argparse
 import json
@@ -57,6 +62,7 @@ import jax.numpy as jnp
 from repro import roofline
 from repro.compression import CompressionSpec
 from repro.configs import FLConfig, INPUT_SHAPES, get_config
+from repro.federation import get_scenario
 from repro.launch.dryrun import _at_depth, _calib_depths, _compile_step
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import federation_kind
@@ -106,6 +112,17 @@ VARIANT_KNOBS = {
     # counts the round body once, so the roofline terms are per-round)
     "flat_fed_rounds_fused": {"flat_fed": True, "flat_sharded": True,
                               "rounds_per_call": 8},
+    # chaos round (repro.federation.faults): mid-round dropouts + NaN
+    # corruption + byzantine scaling defended by trimmed robust
+    # aggregation under quorum Q=2, stacked on int8+EF compression —
+    # proves the guarded round tail lowers on the production mesh with
+    # both HLO assertions (as in flat_fed_compressed)
+    "flat_fed_faults": {"flat_fed": True, "flat_sharded": True,
+                        "scenario": get_scenario(
+                            "dirichlet_dropouts", robust_agg="trimmed",
+                            byzantine_rate=0.1),
+                        "compression": CompressionSpec(
+                            kind="int8", error_feedback=True)},
 }
 
 

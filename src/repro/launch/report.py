@@ -120,7 +120,18 @@ def scenario_summary(name: str, ids_per_round, num_clients: int,
                          ("wire_bytes", np.mean, "wire_bytes_round"),
                          ("wire_bytes", np.sum, "wire_bytes_total"),
                          ("comp_ratio", np.mean, "comp_ratio"),
-                         ("comp_level_mean", np.mean, "comp_level_mean")):
+                         ("comp_level_mean", np.mean, "comp_level_mean"),
+                         # round-health telemetry
+                         # (repro.federation.faults): η-guard rates,
+                         # surviving-client mean, quorum skips
+                         ("eta_clip_rate", np.mean, "eta_clip_rate"),
+                         ("nan_guard_rate", np.mean, "nan_guard_rate"),
+                         ("valid_count", np.mean, "valid_mean"),
+                         ("round_skipped", np.sum, "skipped_rounds"),
+                         ("drop_frac", np.mean, "drop_frac"),
+                         ("byz_frac", np.mean, "byz_frac"),
+                         ("overstale_frac", np.mean, "overstale_frac"),
+                         ("agg_clip_rate", np.mean, "agg_clip_rate")):
         v = agg(key, fn)
         if v is not None:
             out[as_] = float(v)
@@ -135,8 +146,8 @@ def scenario_table(rows):
         return "(no scenario artifacts)"
     out = ["| scenario | rounds | clients seen | top-1/top-5 cohort share "
            "| stale mean/max | K_eff mean (min..max) | flush rate "
-           "| wire/round | comp ratio |",
-           "|---|---|---|---|---|---|---|---|---|"]
+           "| wire/round | comp ratio | valid mean | skips | η clip/NaN |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|"]
     for r in rows:
         seen = r.get("clients_seen", "-")
         share = (f"{r['cohort_top1_share']:.2f}/{r['cohort_top5_share']:.2f}"
@@ -150,8 +161,14 @@ def scenario_table(rows):
         wire = (fmt_b(r["wire_bytes_round"])
                 if "wire_bytes_round" in r else "-")
         ratio = (f"{r['comp_ratio']:.2f}x" if "comp_ratio" in r else "-")
+        vmean = (f"{r['valid_mean']:.2f}" if "valid_mean" in r else "-")
+        skips = (f"{r['skipped_rounds']:.0f}"
+                 if "skipped_rounds" in r else "-")
+        guard = (f"{r['eta_clip_rate']:.3f}/{r['nan_guard_rate']:.3f}"
+                 if "eta_clip_rate" in r else "-")
         out.append(f"| {r['scenario']} | {r['rounds']} | {seen} | {share} "
-                   f"| {stale} | {keff} | {flush} | {wire} | {ratio} |")
+                   f"| {stale} | {keff} | {flush} | {wire} | {ratio} "
+                   f"| {vmean} | {skips} | {guard} |")
     return "\n".join(out)
 
 

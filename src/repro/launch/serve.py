@@ -2,6 +2,13 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch xlstm-1.3b --reduced \
       --batch 4 --prompt-len 64 --gen 32
+
+``--ckpt-dir`` loads the params from a checkpoint
+(repro.checkpoint.restore_params) instead of a fresh init — training
+checkpoints work directly: the FLState manifest's ``params/...`` keys
+match the serving template. ``--ckpt-step`` pins a step (default:
+latest). ``run(args)`` is the driver body; it returns the generated
+token batch plus timing so tests can call it in-process.
 """
 from __future__ import annotations
 
@@ -16,7 +23,7 @@ from repro.configs import ARCH_IDS, get_config
 from repro.models import build_model
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, required=True)
     ap.add_argument("--reduced", action="store_true")
@@ -24,14 +31,30 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--window", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="load params from this checkpoint dir "
+                         "(training FLState checkpoints work: the "
+                         "'params/' manifest prefix is matched)")
+    ap.add_argument("--ckpt-step", type=int, default=None,
+                    help="checkpoint step to load (default: latest)")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    return ap
 
+
+def run(args) -> dict:
+    """Prefill + greedy-decode one batch; returns {"tokens": (B, gen)
+    int32 array, "tok_per_s": float, "ckpt_step": int | None}."""
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     model = build_model(cfg, jnp.float32)
     params = model.init(jax.random.key(args.seed))
+    ckpt_step = None
+    if args.ckpt_dir:
+        from repro.checkpoint import restore_params
+        params, ckpt_step = restore_params(args.ckpt_dir, params,
+                                           step=args.ckpt_step)
+        print(f"loaded params from {args.ckpt_dir} step {ckpt_step}")
     rng = np.random.default_rng(args.seed)
 
     B, S = args.batch, args.prompt_len
@@ -69,6 +92,13 @@ def main():
     print(f"decoded {args.gen} tokens x {B} in {dt:.2f}s "
           f"({args.gen * B / max(dt, 1e-9):.1f} tok/s)")
     print("sample:", np.asarray(gen[0])[:16].tolist())
+    return {"tokens": np.asarray(gen),
+            "tok_per_s": args.gen * B / max(dt, 1e-9),
+            "ckpt_step": ckpt_step}
+
+
+def main():
+    run(build_parser().parse_args())
 
 
 if __name__ == "__main__":

@@ -13,6 +13,29 @@ from repro.core import (get_client_opt, get_server_opt, init_fl_state,
 from repro.models.model import Model
 
 
+def _resolve_scenario(fl: FLConfig, scenario):
+    """Resolve ``scenario`` (Scenario | preset name | None, defaulting to
+    ``fl.scenario``) and fold in the FLConfig robust-aggregation
+    overrides. ``robust_agg="mean"`` / ``quorum=0`` are inert; non-
+    default values need a Scenario to live on, so they promote a bare
+    config to the ``sync_iid`` preset."""
+    if scenario is None and fl.scenario:
+        scenario = fl.scenario
+    overrides = {}
+    if fl.robust_agg != "mean":
+        overrides["robust_agg"] = fl.robust_agg
+    if fl.quorum:
+        overrides["quorum"] = fl.quorum
+    if scenario is None and not overrides:
+        return None
+    if scenario is not None and hasattr(scenario, "is_async") \
+            and not overrides:
+        return scenario
+    from repro.federation import get_scenario
+    return get_scenario(scenario if scenario is not None else "sync_iid",
+                        **overrides)
+
+
 def make_train_step(model: Model, fl: FLConfig, *, num_rounds: int = 1000,
                     use_pallas: bool = False, remat: bool = False,
                     flat: Optional[bool] = None, mesh=None,
@@ -38,17 +61,14 @@ def make_train_step(model: Model, fl: FLConfig, *, num_rounds: int = 1000,
     """
     copt = get_client_opt(fl.client_opt, fl, use_pallas=use_pallas)
     sopt = get_server_opt(fl.server_opt)
-    if scenario is None and fl.scenario:
-        scenario = fl.scenario
-    if scenario is not None and not hasattr(scenario, "is_async"):
-        from repro.federation import get_scenario
-        scenario = get_scenario(scenario)
+    scenario = _resolve_scenario(fl, scenario)
     from repro.compression import get_compression
     compression = get_compression(compression if compression is not None
                                   else fl.compression_spec)
     if flat is None:
         flat = fl.flat_engine
-    if scenario is not None and scenario.is_async:
+    if scenario is not None and (scenario.is_async or scenario.faulty
+                                 or scenario.robust or scenario.quorum > 0):
         flat = True
     if compression.active(scenario):
         flat = True
@@ -102,11 +122,7 @@ def make_train_loop(model: Model, fl: FLConfig, *, num_rounds: int = 1000,
                          f"'delta_sgd', got {fl.client_opt!r}")
     copt = get_client_opt(fl.client_opt, fl, use_pallas=use_pallas)
     sopt = get_server_opt(fl.server_opt)
-    if scenario is None and fl.scenario:
-        scenario = fl.scenario
-    if scenario is not None and not hasattr(scenario, "is_async"):
-        from repro.federation import get_scenario
-        scenario = get_scenario(scenario)
+    scenario = _resolve_scenario(fl, scenario)
     from repro.compression import get_compression
     compression = get_compression(compression if compression is not None
                                   else fl.compression_spec)

@@ -60,11 +60,19 @@ from repro.data.synthetic import get_task
 
 def _resolve_scenario(args):
     """Preset with the run's --seed threaded in, so multi-seed sweeps
-    actually vary the cohort / K_c / staleness draws."""
-    if not args.scenario:
+    actually vary the cohort / K_c / staleness draws. --robust-agg /
+    --quorum fold onto the preset (and promote a bare run to sync_iid
+    so the robust tail has a Scenario to live on)."""
+    overrides = {}
+    if getattr(args, "robust_agg", "mean") != "mean":
+        overrides["robust_agg"] = args.robust_agg
+    if getattr(args, "quorum", 0):
+        overrides["quorum"] = args.quorum
+    if not args.scenario and not overrides:
         return None
     from repro.federation import get_scenario
-    return get_scenario(args.scenario, seed=args.seed)
+    return get_scenario(args.scenario or "sync_iid", seed=args.seed,
+                        **overrides)
 
 
 def _resolve_compression(args):
@@ -83,7 +91,11 @@ class _ScenarioStats:
 
     KEYS = ("stale_mean", "stale_max", "k_eff_mean", "k_eff_min",
             "k_eff_max", "flushed", "buffer_fill", "wire_bytes",
-            "comp_ratio", "comp_level_mean")
+            "comp_ratio", "comp_level_mean",
+            # round-health telemetry (repro.federation.faults)
+            "eta_clip_rate", "nan_guard_rate", "valid_count",
+            "round_skipped", "drop_frac", "byz_frac", "overstale_frac",
+            "agg_clip_rate")
 
     def __init__(self, scenario, num_clients):
         self.scenario, self.num_clients = scenario, num_clients
@@ -114,6 +126,21 @@ class _ScenarioStats:
             with open(out_path, "w") as f:
                 json.dump(s, f, indent=2, default=float)
         return s
+
+
+def _health_str(m):
+    """Compact round-health suffix for the round log. Fault-free legacy
+    rounds emit none of the guard keys, so this stays empty and the log
+    format is unchanged."""
+    if "valid_count" not in m:
+        return ""
+    s = f" valid {int(float(m['valid_count']))}"
+    ng = float(m.get("nan_guard_rate", 0.0))
+    if ng > 0:
+        s += f" nan {ng:.2f}"
+    if float(m.get("round_skipped", 0.0)) > 0:
+        s += " SKIPPED(quorum)"
+    return s
 
 
 def _run_fused(args, loop, state, rounds, stage_block, on_round):
@@ -172,7 +199,11 @@ def train_lm(args):
     state = init_fl_state(params, sopt, scn, compression=comp,
                           cohort=args.clients_per_round)
     state = _maybe_resume(args, state)
-    rng = np.random.default_rng(args.seed)
+    # synthetic-data rng is derived PER ROUND from (seed, round): a
+    # --resume at any round boundary replays the exact batch stream an
+    # uninterrupted run would see (a single sequential stream would
+    # restart from the beginning after a crash)
+    round_rng = lambda r: np.random.default_rng((args.seed, int(r)))
     stats = (_ScenarioStats(scn, args.num_clients)
              if (scn or comp_active) else None)
 
@@ -192,7 +223,8 @@ def train_lm(args):
                     f"(x{float(metrics['comp_ratio']):.2f})"
                     if "wire_bytes" in metrics else "")
             print(f"round {t:4d} loss {float(metrics['loss']):.4f} "
-                  f"eta {float(metrics['eta_mean']):.4f}{wire} "
+                  f"eta {float(metrics['eta_mean']):.4f}{wire}"
+                  f"{_health_str(metrics)} "
                   f"({time.time() - t0:.0f}s)", flush=True)
 
     if args.rounds_per_call > 1:
@@ -205,13 +237,13 @@ def train_lm(args):
                             compression=comp)
 
         def stage_block(round0, n):
-            blocks = [lm_round_batches(rng,
+            blocks = [lm_round_batches(round_rng(round0 + i),
                                        clients=args.clients_per_round,
                                        local_steps=fl.local_steps,
                                        batch=args.batch, seq=args.seq,
                                        vocab=cfg.vocab_size,
                                        extras=extras)
-                      for _ in range(n)]
+                      for i in range(n)]
             stacked = {k: jnp.asarray(np.stack([b[k] for b in blocks]))
                        for k in blocks[0]}
             return stacked, None
@@ -228,7 +260,10 @@ def train_lm(args):
                                      num_clients=args.num_clients,
                                      compression=comp))
     for t in range(args.rounds):
-        batches = lm_round_batches(rng, clients=args.clients_per_round,
+        # keyed on state.round, not the loop index, for the same
+        # resume-replay reason as the paper-task cohort draw below
+        batches = lm_round_batches(round_rng(int(state.round)),
+                                   clients=args.clients_per_round,
                                    local_steps=fl.local_steps,
                                    batch=args.batch, seq=args.seq,
                                    vocab=cfg.vocab_size, extras=extras)
@@ -325,7 +360,8 @@ def train_paper_task(args):
                 stats.update(None, row)
             if t % max(1, args.rounds // 10) == 0 or t == args.rounds - 1:
                 print(f"round {t:4d} loss {float(row['loss']):.4f} "
-                      f"eta {float(row['eta_mean']):.4f} "
+                      f"eta {float(row['eta_mean']):.4f}"
+                      f"{_health_str(row)} "
                       f"({time.time() - t0:.0f}s)", flush=True)
 
         state = _run_fused(args, loop, state, args.rounds, stage_block,
@@ -364,7 +400,8 @@ def train_paper_task(args):
                            jnp.asarray(yt))
             print(f"round {t:4d} loss {float(metrics['loss']):.4f} "
                   f"test-acc {float(acc):.4f} "
-                  f"eta {float(metrics['eta_mean']):.4f} "
+                  f"eta {float(metrics['eta_mean']):.4f}"
+                  f"{_health_str(metrics)} "
                   f"({time.time() - t0:.0f}s)", flush=True)
     if stats:
         xt, yt = fed.test_batch(2000)
@@ -408,6 +445,14 @@ def main():
     ap.add_argument("--error-feedback", action="store_true",
                     help="EF21 error feedback (per-cohort-slot state in "
                          "FLState.ef)")
+    ap.add_argument("--robust-agg", default="mean",
+                    choices=["mean", "clip", "trimmed", "median"],
+                    help="robust server aggregation on the flat engine "
+                         "(repro.federation.faults); overrides the "
+                         "scenario preset's choice")
+    ap.add_argument("--quorum", type=int, default=0,
+                    help="skip the server update when fewer than Q "
+                         "clients survive the round's faults")
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--fedprox-mu", type=float, default=0.0)
     ap.add_argument("--use-pallas", action="store_true")

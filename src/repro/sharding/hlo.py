@@ -129,7 +129,8 @@ def fullprec_collective_report(hlo_text: str, *, max_elems: int,
 
 
 def assert_no_fullprec_delta_collective(compiled, C: int, N: int, *,
-                                        mesh, federation) -> Dict:
+                                        mesh, federation,
+                                        max_payload_elems=None) -> Dict:
     """Assert the compiled compressed sharded round ships no
     full-precision (C, N) client delta across the client shard boundary
     — the machine-checkable form of "compression happens before the
@@ -143,6 +144,14 @@ def assert_no_fullprec_delta_collective(compiled, C: int, N: int, *,
     per-client delta slab went over the simulated wire. Needs
     C_local >= 2 to tell the two apart (raises ValueError otherwise —
     e.g. one-client-per-shard production specs).
+
+    ``max_payload_elems`` optionally TIGHTENS the bound: a robust-
+    aggregation round (repro.federation.faults) can declare its largest
+    legitimate client-crossing payload — e.g. ``2 * n_loc`` for the
+    aggregated mean plus the bucketed robust partial — so the check
+    trips on anything bigger even when it is smaller than a full
+    (C_local, N_local) slab. The default keeps the PR 4 compression
+    bound.
     """
     import numpy as np
     client_axes, _ = federation.flat_axes(mesh)
@@ -154,8 +163,14 @@ def assert_no_fullprec_delta_collective(compiled, C: int, N: int, *,
             "assert_no_fullprec_delta_collective needs >= 2 clients per "
             f"client shard to separate a delta slab from the aggregated "
             f"mean (C={C}, client shards={c_shards})")
+    max_elems = c_loc * n_loc
+    if max_payload_elems is not None:
+        if max_payload_elems < 1:
+            raise ValueError(
+                f"max_payload_elems must be >= 1, got {max_payload_elems}")
+        max_elems = min(max_elems, int(max_payload_elems) + 1)
     rep = fullprec_collective_report(
-        compiled.as_text(), max_elems=c_loc * n_loc,
+        compiled.as_text(), max_elems=max_elems,
         client_coord_of=_client_coords(mesh, client_axes))
     assert rep["fullprec"] == 0, (
         f"full-precision client delta (>= ({c_loc}, {n_loc}) f32) "

@@ -172,6 +172,60 @@ def test_roundtrip_flat_form_state(tmp_path, rng):
         jax.tree_util.tree_leaves(state))
 
 
+# ------------------------------------------------ driver crash-resume
+def _lm_args(**over):
+    import argparse
+    base = dict(arch="tinyllama-1.1b", reduced=True, layers=1, d_model=64,
+                rounds=6, clients_per_round=2, num_clients=10, alpha=0.1,
+                local_steps=2, batch=2, seq=16, client_opt="delta_sgd",
+                server_opt="fedavg", scenario=None, out=None,
+                compression="none", k_frac=0.25, error_feedback=False,
+                robust_agg="mean", quorum=0, lr=0.05, fedprox_mu=0.0,
+                use_pallas=False, rounds_per_call=1, flat=False,
+                ckpt_dir=None, ckpt_every=2, resume=False, seed=0)
+    base.update(over)
+    return argparse.Namespace(**base)
+
+
+@pytest.mark.slow
+def test_train_lm_crash_resume_bit_exact(tmp_path):
+    """Satellite acceptance (crash-resume hardening): kill an async+EF
+    LM run mid-way, --resume from the last checkpoint, and the final
+    state — params, server state, round counter, async buffer (count
+    included) and EF21 tree — is bit-identical to the uninterrupted
+    run. Works because (a) every state slot rides the checkpoint and
+    (b) the synthetic-data rng is derived per round from (seed, round),
+    so the resumed run replays the exact batch stream."""
+    from repro.launch.train import train_lm
+    kw = dict(scenario="zipf_async", compression="int8",
+              error_feedback=True)
+    straight = train_lm(_lm_args(ckpt_dir=str(tmp_path / "ref"), **kw))
+    # "crash" after 3 of 6 rounds, then resume for the remaining 3
+    crash_dir = str(tmp_path / "crash")
+    train_lm(_lm_args(rounds=3, ckpt_dir=crash_dir, **kw))
+    resumed = train_lm(_lm_args(rounds=3, ckpt_dir=crash_dir,
+                                resume=True, **kw))
+    assert int(straight.round) == int(resumed.round) == 6
+    assert int(resumed.buffer.count) == int(straight.buffer.count)
+    _assert_trees_equal(straight, resumed)
+
+
+@pytest.mark.slow
+def test_train_lm_crash_resume_fused_blocks(tmp_path):
+    """Same contract through the round-fused driver path: checkpoints
+    land on block boundaries, and a resume from one reproduces the
+    uninterrupted fused run bit for bit."""
+    from repro.launch.train import train_lm
+    kw = dict(rounds_per_call=3, flat=True)
+    straight = train_lm(_lm_args(ckpt_dir=str(tmp_path / "ref"), **kw))
+    crash_dir = str(tmp_path / "crash")
+    train_lm(_lm_args(rounds=3, ckpt_dir=crash_dir, **kw))
+    resumed = train_lm(_lm_args(rounds=3, ckpt_dir=crash_dir,
+                                resume=True, **kw))
+    assert int(straight.round) == int(resumed.round) == 6
+    _assert_trees_equal(straight, resumed)
+
+
 def test_fused_block_checkpoint_resumes_host_loop(tmp_path, rng):
     """A checkpoint written at a fused block boundary resumes a HOST
     loop bit-identically: fused rounds 0..3 -> checkpoint -> host rounds

@@ -1,39 +1,43 @@
 """benchmarks/compare.py guard semantics: missing baseline rows are
 advisory (satellite: new baseline rows must not brick older result
-files), and ``level: soft`` entries never hard-fail."""
+files), ``level: soft`` entries never hard-fail, one malformed csv row
+or baseline entry degrades to an advisory instead of killing the guard,
+and the run emits a machine-readable hard/soft/advisory summary."""
+import json
 import os
+import subprocess
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.compare import check  # noqa: E402
+from benchmarks.compare import check, read_results  # noqa: E402
 
 
 def test_missing_row_is_advisory_not_violation():
-    violations, advisories, report = check(
+    hard, soft, advisories, report = check(
         {}, {"new/row": {"us_per_call": 10.0}})
-    assert violations == []
+    assert hard == [] and soft == []
     assert len(advisories) == 1 and "missing" in advisories[0]
     assert report == []
 
 
 def test_missing_normalize_by_row_is_advisory():
-    violations, advisories, _ = check(
+    hard, soft, advisories, _ = check(
         {"a": (10.0, 0.0)},
         {"a": {"normalize_by": "gone", "ratio": 1.0}})
-    assert violations == []
+    assert hard == [] and soft == []
     assert any("normalize_by" in a for a in advisories)
 
 
-def test_soft_level_breach_is_advisory():
+def test_soft_level_breach_routes_to_soft_bucket():
     results = {"a": (30.0, 0.5), "base": (10.0, 0.0)}
     baseline = {"a": {"normalize_by": "base", "ratio": 1.0,
                       "max_regression": 1.25, "max_err": 0.1,
                       "level": "soft"}}
-    violations, advisories, report = check(results, baseline)
-    assert violations == []
+    hard, soft, advisories, report = check(results, baseline)
+    assert hard == [] and advisories == []
     # both the regression (ratio 3 > 1.25) and max_err breach are soft
-    assert len(advisories) == 2
+    assert len(soft) == 2
     assert any("soft" in line for line in report)
 
 
@@ -41,14 +45,84 @@ def test_hard_violations_still_fire():
     results = {"a": (30.0, 0.5), "base": (10.0, 0.0)}
     baseline = {"a": {"normalize_by": "base", "ratio": 1.0,
                       "max_regression": 1.25, "max_err": 0.1}}
-    violations, advisories, _ = check(results, baseline)
-    assert len(violations) == 2 and advisories == []
+    hard, soft, advisories, _ = check(results, baseline)
+    assert len(hard) == 2 and soft == [] and advisories == []
 
 
 def test_within_limit_passes_and_reports():
     results = {"a": (11.0, 0.0), "base": (10.0, 0.0)}
     baseline = {"a": {"normalize_by": "base", "ratio": 1.0,
                       "max_regression": 1.25}}
-    violations, advisories, report = check(results, baseline)
-    assert violations == [] and advisories == []
+    hard, soft, advisories, report = check(results, baseline)
+    assert hard == [] and soft == [] and advisories == []
     assert len(report) == 1 and "ratio vs base" in report[0]
+
+
+def test_broken_baseline_entry_is_advisory_per_row():
+    # entry missing both normalize_by and us_per_call raises KeyError
+    # inside the per-entry check — it must degrade to an advisory and
+    # the healthy sibling entry must still be checked
+    results = {"a": (10.0, 0.0), "b": (10.0, 0.0)}
+    baseline = {"a": {}, "b": {"us_per_call": 10.0}}
+    hard, soft, advisories, report = check(results, baseline)
+    assert hard == [] and soft == []
+    assert len(advisories) == 1 and "errored" in advisories[0]
+    assert len(report) == 1 and report[0].startswith("b:")
+
+
+def test_read_results_skips_malformed_rows(tmp_path):
+    p = tmp_path / "bench_results.csv"
+    p.write_text("name,us_per_call,derived\n"
+                 "good,10.0,0.5\n"
+                 "bad,not_a_number,0.5\n"
+                 "too,many,fields,here\n")
+    rows, bad = read_results(str(p))
+    assert rows == {"good": (10.0, 0.5)}
+    assert len(bad) == 2
+
+
+def _run_compare(tmp_path, csv_text, baseline, mode="hard"):
+    csv = tmp_path / "bench_results.csv"
+    csv.write_text(csv_text)
+    base = tmp_path / "baseline.json"
+    base.write_text(json.dumps(baseline))
+    out = tmp_path / "summary.json"
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..")
+               + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.compare", str(csv), str(base),
+         "--mode", mode, "--summary-out", str(out)],
+        capture_output=True, text=True, env=env)
+    return proc, (json.loads(out.read_text()) if out.exists() else None)
+
+
+def test_cli_summary_and_exit_codes(tmp_path):
+    csv = ("name,us_per_call,derived\n"
+           "a,30.0,0.0\nbase,10.0,0.0\nsoft_row,30.0,0.0\n")
+    baseline = {
+        "a": {"normalize_by": "base", "ratio": 1.0,
+              "max_regression": 1.25},
+        "soft_row": {"normalize_by": "base", "ratio": 1.0,
+                     "max_regression": 1.25, "level": "soft"},
+        "gone": {"us_per_call": 5.0},
+    }
+    proc, summary = _run_compare(tmp_path, csv, baseline, mode="hard")
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "bench guard summary:" in proc.stdout
+    assert summary == {"mode": "hard", "rows_checked": 2, "hard": 1,
+                       "soft": 1, "advisory": 1, "ok": False}
+    # soft mode: same breaches, exit 0
+    proc, summary = _run_compare(tmp_path, csv, baseline, mode="soft")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert summary["ok"] is True and summary["hard"] == 1
+
+
+def test_cli_soft_only_breaches_exit_zero_in_hard_mode(tmp_path):
+    csv = "name,us_per_call,derived\nsoft_row,30.0,0.0\nbase,10.0,0.0\n"
+    baseline = {"soft_row": {"normalize_by": "base", "ratio": 1.0,
+                             "max_regression": 1.25, "level": "soft"}}
+    proc, summary = _run_compare(tmp_path, csv, baseline, mode="hard")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert summary["soft"] == 1 and summary["hard"] == 0
+    assert summary["ok"] is True
