@@ -34,6 +34,13 @@ derived = final test accuracy unless stated).
              the host loop at C=128 — us/round both ways (bit-exact,
              fused-row derived = max |param diff| must be 0) plus the
              host/fused speedup row (acceptance: >= 1.5x)
+  fleet    : fleet regime (repro.core.fed_loop.make_fleet_loop +
+             repro.federation.arena) — us/round at C_registered in
+             {10^2, 10^3} (--quick; full adds {10^4, 10^5}) with a
+             fixed 16-client cohort, each size compile-checked against
+             the cohort-only memory ceiling
+             (hlo.assert_cohort_only_materialization), plus one fused
+             Gumbel-top-k cohort draw over 10^5 zipf candidates
 
 Full protocol details: benchmarks/fl_common.py. Run everything:
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only table1,...]
@@ -282,7 +289,16 @@ def sharded(rounds=None):
     FederationSpec.flat_spec vs the replicated flat engine. Timing is
     host-mesh wall time (virtual CPU devices — layout/collective
     correctness, not TPU speed); derived of the sharded row = max
-    |param diff| vs the replicated engine after 3 rounds."""
+    |param diff| vs the replicated engine after 3 rounds.
+
+    The flat_block_* rows time the round-fused loop both ways: the
+    replicated fused loop vs the block-level shard_map
+    (make_fl_loop(block_sharded=True) — ONE shard_map around the whole
+    R-round lax.scan, so per-round dispatch overhead is paid once per
+    block instead of once per round). Their us ratio is the dispatch-
+    overhead figure baseline.json soft-guards (measured ~2.5-3x vs the
+    replicated per-round engine; the limit adds headroom for shared-CPU
+    timing noise)."""
     del rounds
     import jax
     import jax.numpy as jnp
@@ -325,6 +341,47 @@ def sharded(rounds=None):
                float(np.max(np.abs(finals["sharded"]
                                    - finals["replicated"]))))
         emit(f"sharded/flat_round_{name}_{shape[0]}x{shape[1]}", us, err)
+
+    # ---- block-level shard_map: the fused R-round loop replicated vs
+    # wrapped in ONE shard_map over the client axes (core.fed_loop
+    # block_sharded=True). N stays replicated (flat_shards == 1); the
+    # only client-crossing collective is the aggregate psum, so the
+    # sharded block's per-round cost tracks the replicated loop's
+    # instead of paying per-round SPMD dispatch ----
+    from repro.core import flatten_fl_state, make_fl_loop
+    from repro.sharding.spec import FederationSpec
+    fedc = FederationSpec(client_axes=("data",), fsdp_axes=(), tp_axes=())
+    R = 8
+    data = {"A": jnp.asarray(rng.normal(size=(R, C, K, 8, D)),
+                             jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(R, C, K, 8)), jnp.float32)}
+    kwb = dict(params_like=params, num_rounds=4 * R, rounds_per_call=R,
+               flat="xla")
+    finals_b = {}
+    data1 = jax.tree.map(lambda x: x[:1], data)
+    for name, kw in (("block_replicated", {}),
+                     ("block_sharded", dict(mesh=mesh, federation=fedc,
+                                            block_sharded=True))):
+        loop = make_fl_loop(loss, copt, sopt, **kwb, **kw)
+        jloop = jax.jit(loop)
+        f0 = flatten_fl_state(init_fl_state(params, sopt), loop.layout)
+        fst, _ = jloop(f0, data)             # compile + warm
+        jax.block_until_ready(fst.P)
+        t0 = time.time()
+        for _ in range(3):
+            fst, _ = jloop(f0, data)
+        jax.block_until_ready(fst.P)
+        us = (time.time() - t0) / (3 * R) * 1e6
+        # parity over ONE round: psum reassociation is ~1e-6/round, but
+        # Δ-SGD's η min-branch can discretely amplify it over a long
+        # block — the controlled-tolerance multi-round parity lives in
+        # tests/test_fleet.py
+        f1, _ = jloop(f0, data1)
+        finals_b[name] = np.asarray(f1.P)
+        err = (0.0 if name == "block_replicated" else
+               float(np.max(np.abs(finals_b["block_sharded"]
+                                   - finals_b["block_replicated"]))))
+        emit(f"sharded/flat_{name}_{shape[0]}x{shape[1]}", us, err)
 
 
 def scenarios(rounds=None):
@@ -544,6 +601,72 @@ def rounds_fused(rounds=None):
     emit("rounds_fused/speedup", us_fused, us_host / us_fused)
 
 
+def fleet(rounds=None):
+    """Fleet-scale suite (repro.core.fed_loop.make_fleet_loop +
+    repro.federation.arena): the fleet loop at C_registered in {100,
+    1000} (quick; the full run adds {10^4, 10^5}) with a FIXED cohort of
+    C=16 — us/round must stay flat in C_registered because only the
+    sampled cohort is ever materialized. Each size is compiled first and
+    checked against the memory ceiling
+    (repro.sharding.hlo.assert_cohort_only_materialization: no tensor
+    wider than O(C_registered) scalars along the registered dim), so a
+    row appearing at all means the ceiling held (derived = 0). The
+    scheduler row times ONE fused Gumbel-top-k cohort draw over 10^5
+    zipf candidates (derived = 0 when the draw is C distinct in-range
+    ids)."""
+    quick = rounds is not None and rounds <= 25
+    import jax
+    import jax.numpy as jnp
+    from repro.core import (flatten_fl_state, get_client_opt,
+                            get_server_opt, init_fl_state, make_fleet_loop,
+                            make_loss)
+    from repro.federation import arena_init
+    from repro.federation.schedulers import make_scheduler
+    from repro.sharding.hlo import assert_cohort_only_materialization
+
+    rng = np.random.default_rng(0)
+    D, C, K, B, R = 512, 16, 2, 4, 4
+
+    def quad(params, batch):
+        r = batch["A"] @ params["x"] - batch["b"]
+        return 0.5 * jnp.mean(r * r), {}
+
+    loss = make_loss(quad)
+    copt = get_client_opt("delta_sgd")
+    sopt = get_server_opt("fedavg")
+    params = {"x": jnp.asarray(rng.normal(size=D), jnp.float32)}
+    data = {"A": jnp.asarray(rng.normal(size=(R, C, K, B, D)),
+                             jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(R, C, K, B)), jnp.float32)}
+    for M in (100, 1000) if quick else (100, 1000, 10_000, 100_000):
+        loop = make_fleet_loop(loss, copt, sopt, params_like=params,
+                               num_rounds=4 * R, num_registered=M,
+                               rounds_per_call=R, seed=7)
+        car = arena_init(M, eta0=loop.eta0)
+        fst = flatten_fl_state(init_fl_state(params, sopt), loop.layout)
+        jloop = jax.jit(loop)
+        compiled = jloop.lower((fst, car), data).compile()
+        assert_cohort_only_materialization(compiled, M)
+        out = jloop((fst, car), data)        # warm from the same exec
+        jax.block_until_ready(out[0][0].P)
+        t0 = time.time()
+        for _ in range(3):
+            out = jloop((fst, car), data)
+        jax.block_until_ready(out[0][0].P)
+        emit(f"fleet/loop_c{M}", (time.time() - t0) / (3 * R) * 1e6, 0.0)
+
+    # scheduler scaling: one fused Gumbel-top-k draw over 10^5 heavy-
+    # tailed candidates — no O(C_registered * N) host materialization
+    M = 100_000
+    sch = make_scheduler("zipf", num_clients=M, cohort=C)
+    key = jax.random.key(0)
+    samp = jax.jit(lambda t: sch.sample(key, t))
+    us, ids = _timeit(samp, jnp.int32(0))
+    ids = np.asarray(ids)
+    ok = (len(np.unique(ids)) == C and ids.min() >= 0 and ids.max() < M)
+    emit("fleet/sched_zipf_topk_100k", us, 0.0 if ok else 1.0)
+
+
 ALL = {"table1": table1, "table2b": table2b, "table3": table3,
        "table4": table4, "fig4": fig4, "fig5": fig5,
        # convex keeps its own T=40 protocol; kernels/sharded/scenarios/
@@ -554,7 +677,8 @@ ALL = {"table1": table1, "table2b": table2b, "table3": table3,
        "scenarios": scenarios,
        "compression": compression,
        "faults": faults,
-       "rounds_fused": rounds_fused}
+       "rounds_fused": rounds_fused,
+       "fleet": fleet}
 
 
 def _write_csv(path: str = "bench_results.csv") -> None:

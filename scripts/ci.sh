@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
-# CI: tier-1 tests (exact ROADMAP verify command) + kernels/sharded/
-# scenarios/compression/faults benchmark smoke + benchmark-regression
-# guard (faults rows are soft-baselined: repro.federation.faults).
+# CI: docs-drift check (scripts/gen_docs.py) + tier-1 tests (exact
+# ROADMAP verify command) + kernels/sharded/scenarios/compression/
+# faults/rounds_fused/fleet benchmark smoke + benchmark-regression
+# guard (scenario/compression/fault/fleet rows are soft-baselined).
 #
 # BENCH_GUARD=hard|soft|off (default hard): the guard compares
 # bench_results.csv against benchmarks/baseline.json — soft on the
@@ -13,11 +14,17 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 # (data, model) mesh (tests/test_flat.py needs8 cases + `sharded` bench)
 export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
 
+# docs drift: the scenario table in docs/SCENARIOS.md is generated
+# from the SCENARIOS registry — regenerate and fail on any diff
+python scripts/gen_docs.py
+git diff --exit-code -- docs/
+
 # fast tier first (-m "not slow"), then the slow tail — a broken fast
 # test fails CI before the multi-round/mesh-heavy tests even start
 python -m pytest -x -q -m "not slow"
 python -m pytest -x -q -m slow
 python -m benchmarks.run \
-    --only kernels,sharded,scenarios,compression,faults,rounds_fused --quick
+    --only kernels,sharded,scenarios,compression,faults,rounds_fused,fleet \
+    --quick
 python -m benchmarks.compare bench_results.csv benchmarks/baseline.json \
     --mode "${BENCH_GUARD:-hard}"

@@ -210,6 +210,15 @@ class FLConfig:
     # "mean"/0 are inert and keep the exact legacy round tail.
     robust_agg: str = "mean"         # mean|clip|trimmed|median
     quorum: int = 0                  # skip round when < Q valid clients
+    # fleet scale (repro.federation.arena): C_registered clients known
+    # to the server, of which only |S_t| = p·m are sampled per round.
+    # None keeps the legacy regime (registered == num_clients); setting
+    # it routes training through make_fleet_loop — per-registered-client
+    # state lives in the sharded ClientArena and cohort draws run over
+    # all C_registered candidates. num_clients then bounds the DATA
+    # partitions: registered client i trains on partition i % m
+    # (virtual clients), so fleet scale never multiplies dataset memory.
+    num_registered_clients: Optional[int] = None
 
     @property
     def compression_spec(self):
@@ -219,9 +228,27 @@ class FLConfig:
                                error_feedback=self.error_feedback)
 
     @property
+    def registered_clients(self) -> int:
+        """C_registered: the fleet size the schedulers draw over.
+        Defaults to ``num_clients`` (legacy regime, every registered
+        client has its own data partition)."""
+        m = self.num_registered_clients
+        if m is not None and m < self.num_clients:
+            raise ValueError(f"num_registered_clients={m} must be >= "
+                             f"num_clients={self.num_clients}")
+        return self.num_clients if m is None else m
+
+    @property
+    def fleet(self) -> bool:
+        return self.num_registered_clients is not None
+
+    @property
     def clients_per_round(self) -> int:
         # shared helper (repro.federation.schedulers.cohort_size): the
         # data pipeline computes |S_t| with the SAME rounding, so config
         # and sampled batches can never disagree on the cohort shape.
+        # Fleet regime: participation applies to the REGISTERED fleet
+        # (|S_t| = p·C_registered), same as the cross-device deployments
+        # the schedulers model.
         from repro.federation.schedulers import cohort_size
-        return cohort_size(self.participation, self.num_clients)
+        return cohort_size(self.participation, self.registered_clients)

@@ -6,17 +6,18 @@ from repro.core.delta_sgd import (DeltaSGDState, FlatDeltaSGDState,
                                   delta_sgd_init, delta_sgd_reset,
                                   delta_sgd_update, flat_delta_sgd_init,
                                   flat_delta_sgd_step)
-from repro.core.fed_round import FLState, init_fl_state, make_fl_round
+from repro.core.fed_round import (FLState, RoundAux, init_fl_state,
+                                  make_fl_round)
 from repro.core.fed_loop import (FlatFLState, arena_gather,
                                  flatten_fl_state, make_fl_loop,
-                                 unflatten_fl_state)
+                                 make_fleet_loop, unflatten_fl_state)
 from repro.core.losses import make_loss
 from repro.core.server_opt import SERVER_OPTS, ServerOpt, get_server_opt
 
 __all__ = ["CLIENT_OPTS", "ClientOpt", "get_client_opt", "DeltaSGDState",
            "FlatDeltaSGDState", "delta_sgd_init", "delta_sgd_reset",
            "delta_sgd_update", "flat_delta_sgd_init", "flat_delta_sgd_step",
-           "FLState", "init_fl_state", "make_fl_round", "make_loss",
-           "FlatFLState", "arena_gather", "flatten_fl_state",
-           "make_fl_loop", "unflatten_fl_state",
+           "FLState", "RoundAux", "init_fl_state", "make_fl_round",
+           "make_loss", "FlatFLState", "arena_gather", "flatten_fl_state",
+           "make_fl_loop", "make_fleet_loop", "unflatten_fl_state",
            "SERVER_OPTS", "ServerOpt", "get_server_opt", "flat"]

@@ -92,6 +92,21 @@ class FLState(NamedTuple):
                             # axis, f32 — each slot's reconstruction g_c
 
 
+class RoundAux(NamedTuple):
+    """Per-client round outputs the flat body hands back NEXT TO the new
+    state — what the fleet arena (repro.federation.arena) scatters into
+    per-registered-client storage after a round.
+
+    ``P_locals`` (C, N): round-end local params (the flat form of the
+    vmap engine's ``new_locals``). ``etas`` (C,): round-end Δ-SGD step
+    sizes — the per-client adaptive state that persists across the
+    rounds a client sits out when an arena carries it. ``valid`` (C,)
+    bool: NaN-guard survivors (all True on fault-free rounds)."""
+    P_locals: jax.Array
+    etas: jax.Array
+    valid: jax.Array
+
+
 def init_fl_state(params, server_opt: ServerOpt, scenario=None,
                   compression=None, cohort: Optional[int] = None) -> FLState:
     """``scenario`` (repro.federation.Scenario): async scenarios allocate
@@ -389,23 +404,34 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
 
         pspec = cspec = nspec = None
 
-    def flat_step(P, G, S, mask, active):
+    def flat_step(P, G, S, mask, active, eta0_step=None):
+        """``eta0_step`` optionally overrides the scalar η₀ with a (C,)
+        per-client vector (the fleet arena's Δ-SGD warm-start carry);
+        the first-step rule broadcasts either form identically."""
+        e0 = eta0 if eta0_step is None else eta0_step
         if sharded:
             return flat_delta_sgd_step_sharded(
                 P, G, S, gamma=gamma, delta=delta, eta0=eta0, mesh=mesh,
                 pspec=pspec, mask=mask, active=active, backend=backend)
         return flat_delta_sgd_step(P, G, S, gamma=gamma, delta=delta,
-                                   eta0=eta0, mask=mask, active=active,
+                                   eta0=e0, mask=mask, active=active,
                                    backend=backend)
 
     def flat_body(fstate, client_batches, layout, client_weights=None,
-                  prev_local_params=None, gp=None):
+                  prev_local_params=None, gp=None, eta0_c=None):
         """One round on flat-form state (core.fed_loop.FlatFLState) ->
-        (new_fstate, metrics, P_locals (C, N)). ``gp`` optionally passes
+        (new_fstate, metrics, RoundAux). ``gp`` optionally passes
         the global params pytree when the caller still has it (the
         per-round wrapper); the fused loop leaves it None and the body
-        reconstructs the views from the carried flat buffer."""
+        reconstructs the views from the carried flat buffer. ``eta0_c``
+        optionally replaces the scalar round-start η₀ with a (C,)
+        per-client vector (the fleet loop's ``eta_carry`` warm start —
+        non-sharded engines only)."""
         from repro.core.fed_loop import FlatFLState
+        if eta0_c is not None and sharded:
+            raise ValueError("per-client eta0 warm start (eta0_c) is not "
+                             "supported on the per-round sharded engine — "
+                             "the fleet loop runs un-meshed")
         if gp is None:
             gp = flatlib.unpack(fstate.P, layout)
 
@@ -498,7 +524,7 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
                 G = constrain(jnp.where(bad[:, None],
                                         jnp.float32(jnp.nan), G), pspec)
             active = (k_idx < budget) if budget is not None else None
-            P, S = flat_step(P, G, S, mask, active)
+            P, S = flat_step(P, G, S, mask, active, eta0_c)
             return (P, S), l
 
         from repro.models.common import scan_unroll
@@ -783,7 +809,7 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
             new_fstate = FlatFLState(newP, sstate, fstate.round + 1, buf,
                                      fstate.ef if new_ef is None else new_ef)
 
-        return new_fstate, metrics, P
+        return new_fstate, metrics, RoundAux(P, S.eta, S.valid)
 
     def round_fn(state: FLState, client_batches, client_weights=None,
                  prev_local_params=None):
@@ -792,11 +818,11 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
                                          unflatten_fl_state)
         layout = flatlib.layout_of(state.params, shards=shards)
         fstate = flatten_fl_state(state, layout)
-        new_fstate, metrics, P_locals = flat_body(
+        new_fstate, metrics, aux = flat_body(
             fstate, client_batches, layout, client_weights=client_weights,
             prev_local_params=prev_local_params, gp=state.params)
         new_state = unflatten_fl_state(new_fstate, layout)
-        new_locals = flatlib.unpack_batched(P_locals, layout)
+        new_locals = flatlib.unpack_batched(aux.P_locals, layout)
         return new_state, metrics, new_locals
 
     round_fn.flat_body = flat_body

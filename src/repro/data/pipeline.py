@@ -8,6 +8,15 @@ so the ids this pipeline gathers data for and the ids the round engine
 sees always agree. The cohort size comes from the shared
 ``cohort_size`` helper, the single place |S_t| = round(p·m) is computed.
 
+Fleet regime (``num_registered``): the scheduler draws over
+C_registered >> C_cohort VIRTUAL clients while the dataset keeps only
+``num_clients`` physical partitions — registered client i trains on
+partition ``i % num_clients``. Cohort draws, weights, and the arena
+gather all key on the REGISTERED id (what the fleet loop's
+``ClientArena`` is indexed by); only the example gather maps down to
+the physical partition, so a 10^5-client fleet costs no extra dataset
+memory.
+
 Also provides the synthetic LM round batches used when training the assigned
 transformer architectures federatedly.
 """
@@ -37,37 +46,63 @@ class FederatedDataset:
     # the fused loop pre-draws a whole block of round indices before
     # any eval runs).
     eval_rng: np.random.Generator = None
+    # fleet regime: registered (virtual) clients >> physical partitions;
+    # registered id i maps to partition i % num_clients. None = legacy
+    # (registered == num_clients).
+    num_registered: Optional[int] = None
 
     @classmethod
     def build(cls, task: TaskData, *, num_clients: int, alpha: float,
               samples_per_client: int = 500, seed: int = 0,
-              variable_sizes=None, scenario=None) -> "FederatedDataset":
+              variable_sizes=None, scenario=None,
+              num_registered=None) -> "FederatedDataset":
         clients = dirichlet_partition(task.y, num_clients, alpha,
                                       samples_per_client, seed=seed,
                                       variable_sizes=variable_sizes)
         return cls(task, clients, np.random.default_rng(seed + 17),
                    seed=seed, scenario=scenario,
-                   eval_rng=np.random.default_rng(seed + 23))
+                   eval_rng=np.random.default_rng(seed + 23),
+                   num_registered=num_registered)
 
     @property
     def num_clients(self) -> int:
         return len(self.clients)
 
+    @property
+    def registered_clients(self) -> int:
+        """C_registered — what the schedulers draw over (>= num_clients)."""
+        m = self.num_registered
+        if m is not None and m < len(self.clients):
+            raise ValueError(f"num_registered={m} < {len(self.clients)} "
+                             "physical partitions")
+        return len(self.clients) if m is None else m
+
     def client_sizes(self) -> np.ndarray:
         return np.array([len(c) for c in self.clients], np.float32)
+
+    def registered_sizes(self) -> np.ndarray:
+        """(C_registered,) per-REGISTERED-client sizes: the physical
+        partition sizes cycled over the virtual ids — one numpy array,
+        no per-client Python objects at fleet scale."""
+        sizes = self.client_sizes()
+        m = self.registered_clients
+        if m == len(self.clients):
+            return sizes
+        return sizes[np.arange(m) % len(self.clients)]
 
     def _scheduler(self, C: int):
         """Scheduler + base key for the cohort draw. With a scenario the
         draw is the scenario's (scheduler kind, seed) — identical to the
         in-round reporting draw; without one it is the uniform scheduler
         keyed on the dataset seed (the seed repo's protocol, now on JAX
-        PRNG)."""
+        PRNG). The draw runs over the REGISTERED fleet."""
         import jax
         if self.scenario is not None:
             sch = self.scenario.make_scheduler(
-                self.num_clients, C, sizes=self.client_sizes())
+                self.registered_clients, C, sizes=self.registered_sizes())
             return sch, jax.random.key(self.scenario.seed)
-        sch = make_scheduler("uniform", num_clients=self.num_clients,
+        sch = make_scheduler("uniform",
+                             num_clients=self.registered_clients,
                              cohort=C)
         return sch, jax.random.key(self.seed)
 
@@ -79,9 +114,11 @@ class FederatedDataset:
         client_weights (C,), client_ids). Consumes the exact rng stream
         ``sample_round`` consumes, so a run that pre-computes index
         blocks for the round-fused loop sees the same batches a
-        round-at-a-time run would gather."""
+        round-at-a-time run would gather. ``client_ids`` are REGISTERED
+        ids; the example gather maps them to physical partitions
+        (i % num_clients)."""
         m = self.num_clients
-        C = cohort_size(participation, m)
+        C = cohort_size(participation, self.registered_clients)
         t = self._round if round_idx is None else round_idx
         if round_idx is None:
             self._round += 1
@@ -89,12 +126,12 @@ class FederatedDataset:
         ids = np.asarray(sch.sample(key, t))
         takes = []
         for i in ids:
-            idx = self.clients[i]
+            idx = self.clients[i % m]
             take = self.rng.choice(idx, size=local_steps * batch_size,
                                    replace=len(idx) < local_steps
                                    * batch_size)
             takes.append(take.reshape(local_steps, batch_size))
-        weights = self.client_sizes()[ids]
+        weights = self.client_sizes()[ids % m]
         return (np.stack(takes).astype(np.int32),
                 weights.astype(np.float32), ids)
 

@@ -13,7 +13,15 @@ heterogeneity, and async buffered aggregation (see ROADMAP §Scenarios).
                   server-aggregation ladder (mean/clip/trimmed/median).
   scenarios     — named presets bundling all axes, threaded through
                   FLConfig / fed_round / launch / benchmarks.
+  arena         — fleet-scale per-REGISTERED-client state (EF21, Δ-SGD η
+                  carry, participation history) in (C_registered, ...)
+                  device storage; rounds gather only the sampled
+                  cohort's rows and scatter them back (see
+                  docs/ARCHITECTURE.md §Fleet arena).
 """
+from repro.federation.arena import (ClientArena, arena_init,
+                                    arena_shardings, arena_take,
+                                    arena_update)
 from repro.federation.buffer import (AsyncBufferState, buffer_init,
                                      buffer_merge, buffer_step,
                                      staleness_weights)
@@ -37,4 +45,6 @@ __all__ = [
     "cohort_size", "make_scheduler", "SCENARIOS", "Scenario",
     "get_scenario", "ROBUST_AGG_KINDS", "FaultLanes", "FaultModel",
     "RobustAgg", "robust_aggregate", "robust_aggregate_sharded",
+    "ClientArena", "arena_init", "arena_take", "arena_update",
+    "arena_shardings",
 ]

@@ -1,0 +1,108 @@
+"""Fleet-scale client-state arena: persistent per-REGISTERED-client
+state, keyed by client id.
+
+The round engine only ever materializes the sampled cohort — a (C, ...)
+slab for C = |S_t| clients. At fleet scale (C_registered >> C) the
+per-client state that must SURVIVE the rounds a client sits out — its
+EF21 error-feedback reconstruction, its last Δ-SGD step size, its
+participation history — cannot live in those cohort slots: slot c
+belongs to a different client every round. The arena keys that state by
+registered client id instead:
+
+  * storage is (C_registered, ...) device arrays — optionally sharded
+    over the mesh's client axes (``arena_shardings``), so fleet state
+    scales across devices, never through the host;
+  * the gather/scatter contract: each round the loop draws the cohort
+    ids (the SAME Gumbel-top-k draw the data pipeline uses), gathers
+    ONLY those C rows on device (``arena_take``), runs the round body on
+    the cohort slab, and scatters the updated rows back
+    (``arena_update``). Rows of clients not in the cohort are never
+    read or written — a never-sampled client's state stays bit-identical
+    (property-tested in tests/test_fleet.py);
+  * memory ceiling: with error feedback OFF the arena holds only O(C_registered)
+    scalars per client — no (C_registered, N) buffer ever exists
+    (machine-checked by ``repro.sharding.hlo
+    .assert_cohort_only_materialization`` on the compiled fleet loop).
+    EF21 adds the one (C_registered, N) f32 buffer the algorithm itself
+    requires (Richtárik et al.: g_c persists per client).
+
+Fields:
+  eta         (C_reg,) f32   — last round-end Δ-SGD η (init η₀). The
+                               "Δ-SGD carry": with ``eta_carry=True``
+                               the fleet loop warm-starts a returning
+                               client's η₀ from it (a locally-adaptive
+                               extension in the spirit of Mukherjee et
+                               al.; default OFF keeps Alg. 1's per-round
+                               reset bit-exact).
+  rounds_seen (C_reg,) int32 — participation count (0 = never sampled).
+  last_round  (C_reg,) int32 — round of last participation (−1 before
+                               the first). ``round − last_round`` is the
+                               client's REALIZED staleness — the
+                               async-buffer slot the FedBuff telemetry
+                               reads, as opposed to the drawn staleness
+                               of the scenario.
+  ef          (C_reg, N) f32 — EF21 reconstruction per registered
+                               client (only allocated under
+                               error-feedback compression).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class ClientArena(NamedTuple):
+    eta: jax.Array                      # (C_reg,) f32
+    rounds_seen: jax.Array              # (C_reg,) int32
+    last_round: jax.Array               # (C_reg,) int32, -1 = never
+    ef: Optional[jax.Array] = None      # (C_reg, N) f32 or None
+
+
+def arena_init(num_registered: int, *, eta0: float,
+               ef_width: Optional[int] = None) -> ClientArena:
+    """Fresh arena for ``num_registered`` clients. ``ef_width`` (the
+    flat layout's padded_size) allocates the (C_reg, N) EF21 buffer —
+    leave None unless the run uses error-feedback compression: it is
+    the ONLY field whose memory scales with C_registered × N."""
+    ef = (jnp.zeros((num_registered, ef_width), jnp.float32)
+          if ef_width is not None else None)
+    return ClientArena(
+        jnp.full((num_registered,), eta0, jnp.float32),
+        jnp.zeros((num_registered,), jnp.int32),
+        jnp.full((num_registered,), -1, jnp.int32),
+        ef)
+
+
+def arena_take(arena: ClientArena, ids: jax.Array) -> ClientArena:
+    """Gather the sampled cohort's rows: (C,) ids -> a cohort-sized
+    ClientArena view. O(C) output — the (C_reg, ...) storage is indexed,
+    never copied wholesale."""
+    return jax.tree.map(lambda a: a[ids], arena)
+
+
+def arena_update(arena: ClientArena, ids: jax.Array,
+                 rows: ClientArena) -> ClientArena:
+    """Scatter updated cohort rows back. Only the ``ids`` rows change;
+    every other registered client's state is bit-identical (``.at[].set``
+    leaves unindexed rows untouched). With duplicate ids (never produced
+    by the without-replacement schedulers) the last write wins."""
+    return jax.tree.map(lambda a, r: a.at[ids].set(r), arena, rows)
+
+
+def arena_shardings(arena: ClientArena, mesh, federation):
+    """NamedShardings placing arena rows over the mesh's CLIENT axes —
+    the device-sharded storage layout (``jax.device_put(arena, these)``).
+    Vectors shard their only axis; the EF buffer shards rows and keeps N
+    replicated (the fleet loop gathers cohort rows across shards, which
+    XLA lowers to an O(C·N) gather — EF + meshes beyond that is the
+    per-round sharded engine's job)."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as PS
+    ca, _ = federation.flat_axes(mesh)
+    entry = ca if ca else None
+    return jax.tree.map(
+        lambda a: NamedSharding(
+            mesh, PS(entry) if a.ndim == 1 else PS(entry, None)),
+        arena)

@@ -12,25 +12,24 @@ frozen, hashable config object: the round engine closes over it, and
 all of its randomness flows from ``fold_in(key(seed), round)`` so host
 pipeline and jitted round agree.
 
-Presets (the scenario table in README §Federation scenarios):
+The full preset table lives in docs/SCENARIOS.md — GENERATED from the
+``SCENARIOS`` registry below by scripts/gen_docs.py (CI regenerates it
+and fails on drift), so this docstring does not duplicate it.
 
-  name                 participation   K_c model      aggregation  bandwidth
-  -------------------- --------------- -------------- ------------ ---------
-  sync_iid             uniform         fixed K_max    sync (seed)  fixed
-  sync_dirichlet       uniform         fixed K_max    sync (α=0.1) fixed
-  size_weighted        size-weighted   fixed K_max    sync         fixed
-  dirichlet_stragglers uniform         30% stragglers sync (α=0.1) fixed
-  cyclic_hetero        cyclic window   U{K/4..K}      sync         fixed
-  zipf_async           zipf (s=1.2)    U{K/4..K}      async M=8    fixed
-  bandwidth_tiered     uniform         fixed K_max    sync         tiered
-  dirichlet_dropouts   uniform         30% stragglers sync (α=0.1) fixed
-  byzantine_async      zipf (s=1.2)    U{K/4..K}      async M=8    fixed
-
-The last two are the CHAOS presets, adding the FAULT axis
+``dirichlet_dropouts`` / ``byzantine_async`` are the CHAOS presets,
+adding the FAULT axis
 (repro.federation.faults): ``dirichlet_dropouts`` loses 30% of each
 cohort mid-round and corrupts 5% with NaN gradients (quorum Q=2);
 ``byzantine_async`` flips/scales 10% of deltas by −10× and over-stales
 10% of async updates, defended by clip aggregation (quorum Q=2).
+
+Fleet presets (``fleet_uniform`` / ``fleet_zipf``): the cross-device
+regime the fleet arena targets — C_registered >> C_cohort with
+``participation_hint`` suggesting a sub-percent sampling rate (drivers
+apply it when FLConfig doesn't pin one), uniform vs heavy-tailed zipf
+availability over the registered fleet, and compute heterogeneity on.
+They carry no fault axis: the fleet loop runs every un-meshed engine
+feature, but fleet-scale robustness stays the per-round engines' job.
 
 ``sync_iid`` is the exact seed configuration: fixed speed emits no masks
 and sync aggregation takes the unmodified round tail, so it reproduces
@@ -94,6 +93,12 @@ class Scenario:
     quorum: int = 0                  # skip round when < Q valid clients
     # data hint consumed by drivers/benchmarks (not by the round engine)
     alpha: Optional[float] = None
+    # fleet hints consumed by drivers/benchmarks (not the round engine):
+    # a suggested C_registered and participation rate for the fleet
+    # regime (FLConfig.num_registered_clients overrides the first; an
+    # explicit --participation overrides the second)
+    registered_hint: Optional[int] = None
+    participation_hint: Optional[float] = None
     seed: int = 0
 
     def __post_init__(self):
@@ -213,6 +218,10 @@ SCENARIOS: Dict[str, Scenario] = {s.name: s for s in (
     Scenario("byzantine_async", scheduler="zipf", speed="uniform",
              aggregation="async", buffer_size=8, byzantine_rate=0.1,
              overstale_rate=0.1, robust_agg="clip", quorum=2),
+    Scenario("fleet_uniform", speed="uniform", alpha=0.1,
+             registered_hint=100_000, participation_hint=0.0005),
+    Scenario("fleet_zipf", scheduler="zipf", speed="uniform", alpha=0.1,
+             registered_hint=100_000, participation_hint=0.0005),
 )}
 
 

@@ -25,10 +25,19 @@ Schedulers:
   cyclic        — only a rotating window of clients is available each
                   round (diurnal availability); uniform inside the
                   window.
+
+Fleet scale: every scheduler is O(num_clients) in ONE device vector —
+the (m,) log-weights plus the Gumbel noise — with no O(m) host-side
+materialization (size weights are stored as device/numpy arrays, zipf
+and cyclic weights are computed by ``arange`` on device), so
+``num_clients`` here is C_REGISTERED and 10^5+ candidates draw in a
+single fused ``top_k``. The fleet loop (core.fed_loop.make_fleet_loop)
+calls ``sample`` inside its scanned round; tests/test_fleet.py bounds
+the draw's jaxpr buffers at O(m).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Optional
 
 import jax
@@ -88,9 +97,12 @@ class UniformScheduler(Scheduler):
 
 @dataclass(frozen=True)
 class SizeWeightedScheduler(Scheduler):
-    """P(i) ∝ n_i. ``sizes`` is the (m,) per-client sample-count vector;
-    stored as a tuple so the dataclass stays hashable/static under jit."""
-    sizes: tuple = ()
+    """P(i) ∝ n_i. ``sizes`` is the (m,) per-client sample-count vector,
+    kept as a device (or numpy) array so a 10^5-client fleet never
+    round-trips through a Python tuple — it is excluded from eq/hash
+    (``compare=False``): schedulers are constructed at trace time by the
+    engines, never used as static jit arguments."""
+    sizes: object = field(default=(), compare=False)
     name: str = "size_weighted"
 
     def __post_init__(self):
@@ -156,8 +168,11 @@ def make_scheduler(kind: str, *, num_clients: int, cohort: int,
             # draw degrades to uniform, which is exactly P(i) ∝ equal n_i
             return UniformScheduler(num_clients, cohort,
                                     name="size_weighted")
-        return SizeWeightedScheduler(num_clients, cohort,
-                                     sizes=tuple(float(s) for s in sizes))
+        # keep device arrays on device; anything host-side becomes ONE
+        # numpy array (no per-element Python loop at fleet scale)
+        if not isinstance(sizes, (jax.Array, np.ndarray)):
+            sizes = np.asarray(sizes, np.float32)
+        return SizeWeightedScheduler(num_clients, cohort, sizes=sizes)
     if kind == "zipf":
         return ZipfScheduler(num_clients, cohort, s=zipf_s)
     if kind == "cyclic":

@@ -99,10 +99,14 @@ def scenario_summary(name: str, ids_per_round, num_clients: int,
         slots = max(1, int(h.sum()))
         top = np.sort(h)[::-1]
         out.update(
-            cohort_histogram=h.tolist(),
             clients_seen=int((h > 0).sum()),
             cohort_top1_share=float(top[0] / slots),
             cohort_top5_share=float(top[:5].sum() / slots))
+        # the raw per-client list stays readable at per-round scale but
+        # would be a 100k-entry JSON blob in the fleet regime — there
+        # the share stats above carry the skew story
+        if num_clients <= 10_000:
+            out["cohort_histogram"] = h.tolist()
 
     def agg(key, fn):
         vals = [m[key] for m in metrics_per_round if key in m]
@@ -131,7 +135,15 @@ def scenario_summary(name: str, ids_per_round, num_clients: int,
                          ("drop_frac", np.mean, "drop_frac"),
                          ("byz_frac", np.mean, "byz_frac"),
                          ("overstale_frac", np.mean, "overstale_frac"),
-                         ("agg_clip_rate", np.mean, "agg_clip_rate")):
+                         ("agg_clip_rate", np.mean, "agg_clip_rate"),
+                         # fleet telemetry (core.fed_loop
+                         # .make_fleet_loop): cohort revisit rate, gap
+                         # since a returning client's last round, mean
+                         # carried η entering the round
+                         ("revisit_frac", np.mean, "revisit_frac"),
+                         ("realized_stale_mean", np.mean,
+                          "realized_stale_mean"),
+                         ("eta_carry_mean", np.mean, "eta_carry_mean")):
         v = agg(key, fn)
         if v is not None:
             out[as_] = float(v)

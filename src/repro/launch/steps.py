@@ -9,7 +9,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
 from repro.core import (get_client_opt, get_server_opt, init_fl_state,
-                        make_fl_loop, make_fl_round, make_loss)
+                        make_fl_loop, make_fl_round, make_fleet_loop,
+                        make_loss)
 from repro.models.model import Model
 
 
@@ -143,6 +144,66 @@ def make_train_loop(model: Model, fl: FLConfig, *, num_rounds: int = 1000,
                               scenario=scenario,
                               num_clients=fl.num_clients,
                               compression=compression)
+    return train_loop, sopt, scenario, compression
+
+
+def make_fleet_train_loop(model: Model, fl: FLConfig, *,
+                          num_rounds: int = 1000, rounds_per_call: int = 8,
+                          use_pallas: bool = False, remat: bool = False,
+                          scenario=None, compression=None,
+                          client_sizes=None, gather=None,
+                          batch_index_fn=None, eta_carry: bool = False,
+                          seed: int = 0):
+    """Fleet-scale variant of ``make_train_loop``
+    (core.fed_loop.make_fleet_loop): the loop's carry is
+    ``(FlatFLState, repro.federation.arena.ClientArena)`` — global
+    training state plus per-REGISTERED-client rows — and each scanned
+    round draws its cohort ids on device over all
+    ``fl.registered_clients`` candidates, gathers only those rows, and
+    scatters them back.
+
+    Requires ``fl.num_registered_clients`` (the fleet regime) and the
+    flat Δ-SGD engine. Same scenario/compression resolution as
+    ``make_train_step``; ``client_sizes`` should be the
+    (C_registered,) per-registered-client sizes (e.g.
+    ``FederatedDataset.registered_sizes()``) when the scenario's
+    scheduler is size-weighted. Returns
+    (train_loop, sopt, scenario, compression); build the arena half of
+    the carry with ``repro.federation.arena_init(fl.registered_clients,
+    eta0=train_loop.eta0, ...)``.
+    """
+    if not fl.fleet:
+        raise ValueError("make_fleet_train_loop needs the fleet regime: "
+                         "set FLConfig.num_registered_clients")
+    if fl.client_opt != "delta_sgd":
+        raise ValueError("the fleet loop requires client_opt='delta_sgd', "
+                         f"got {fl.client_opt!r}")
+    copt = get_client_opt(fl.client_opt, fl, use_pallas=use_pallas)
+    sopt = get_server_opt(fl.server_opt)
+    scenario = _resolve_scenario(fl, scenario)
+    from repro.compression import get_compression
+    compression = get_compression(compression if compression is not None
+                                  else fl.compression_spec)
+
+    def base_loss(params, batch):
+        from repro.models.common import remat_blocks
+        with remat_blocks(remat):
+            return model.loss(params, batch, use_pallas=use_pallas)
+
+    loss_fn = make_loss(base_loss, fedprox_mu=fl.fedprox_mu)
+    params_like = jax.eval_shape(model.init, jax.random.key(0))
+    train_loop = make_fleet_loop(loss_fn, copt, sopt,
+                                 params_like=params_like,
+                                 num_rounds=num_rounds,
+                                 num_registered=fl.registered_clients,
+                                 rounds_per_call=rounds_per_call,
+                                 weighted=fl.weighted_agg,
+                                 flat="pallas" if use_pallas else "xla",
+                                 scenario=scenario,
+                                 client_sizes=client_sizes,
+                                 compression=compression, gather=gather,
+                                 batch_index_fn=batch_index_fn,
+                                 eta_carry=eta_carry, seed=seed)
     return train_loop, sopt, scenario, compression
 
 

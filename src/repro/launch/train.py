@@ -40,6 +40,18 @@ checkpoints land on block boundaries (still keyed on the round
 counter, so fused and host-loop checkpoints interoperate), and eval /
 state unpacking happens only at block cadence. Requires
 ``--client-opt delta_sgd``.
+
+``--num-registered M`` (paper tasks) switches on the FLEET regime
+(repro.core.fed_loop.make_fleet_loop + repro.federation.arena): M
+registered clients known to the server, cohorts of |S_t| =
+``--participation``·M drawn over ALL of them each round, per-client
+state (round-end η, participation counters, EF21 residuals) in a
+device-sharded ClientArena indexed by registered id. Registered client
+i trains on data partition ``i % num_clients``, so fleet scale never
+multiplies dataset memory. The ``fleet_uniform`` / ``fleet_zipf``
+scenario presets carry hints (M=100k, p=0.05%) that apply when the
+flags are not given; ``--eta-carry`` warm-starts returning clients
+from their arena row.
 """
 from __future__ import annotations
 
@@ -84,6 +96,21 @@ def _resolve_compression(args):
                            error_feedback=args.error_feedback)
 
 
+def _resolve_fleet(args, scn):
+    """(num_registered, participation) for the run. Explicit
+    --num-registered / --participation win; otherwise a fleet preset's
+    ``registered_hint`` / ``participation_hint`` apply (so
+    ``--scenario fleet_uniform`` alone turns on the fleet regime);
+    otherwise legacy: registered == num_clients, participation 0.1."""
+    m = getattr(args, "num_registered", None)
+    if m is None and scn is not None:
+        m = scn.registered_hint
+    p = getattr(args, "participation", None)
+    if p is None and scn is not None and scn.participation_hint:
+        p = scn.participation_hint
+    return m, (0.1 if p is None else p)
+
+
 class _ScenarioStats:
     """Per-run accumulator for the scenario report (launch/report.py):
     cohort ids per round + the scalar scenario/compression metrics the
@@ -95,7 +122,9 @@ class _ScenarioStats:
             # round-health telemetry (repro.federation.faults)
             "eta_clip_rate", "nan_guard_rate", "valid_count",
             "round_skipped", "drop_frac", "byz_frac", "overstale_frac",
-            "agg_clip_rate")
+            "agg_clip_rate",
+            # fleet telemetry (core.fed_loop.make_fleet_loop)
+            "revisit_frac", "realized_stale_mean", "eta_carry_mean")
 
     def __init__(self, scenario, num_clients):
         self.scenario, self.num_clients = scenario, num_clients
@@ -143,7 +172,8 @@ def _health_str(m):
     return s
 
 
-def _run_fused(args, loop, state, rounds, stage_block, on_round):
+def _run_fused(args, loop, state, rounds, stage_block, on_round,
+               fleet_arena=None):
     """Drive the round-fused loop (repro.core.fed_loop) in R-round
     blocks on donated flat state. ``stage_block(round0, n) ->
     (round_data, arena)`` stages one block's batches (or arena gather
@@ -152,18 +182,28 @@ def _run_fused(args, loop, state, rounds, stage_block, on_round):
     checkpoint cadence of a fused run: saves land on the first boundary
     at or after each ``--ckpt-every`` hit, keyed on the round counter
     like the host loop's (so fused and host-loop checkpoints
-    interoperate via --resume). Returns the final FLState."""
+    interoperate via --resume). Returns the final FLState.
+
+    ``fleet_arena`` switches to the fleet carry
+    (core.fed_loop.make_fleet_loop): the loop carries
+    (FlatFLState, ClientArena). Checkpoints still save only the FLState
+    half — a fleet --resume restarts the arena cold (η warm-starts and
+    participation counters reset; the global params/round do not)."""
     from repro.checkpoint import save
     from repro.core import flatten_fl_state, unflatten_fl_state
-    R = args.rounds_per_call
+    R = max(1, args.rounds_per_call)
     layout = loop.layout
     jloop = jax.jit(loop, donate_argnums=0)
     fstate = flatten_fl_state(state, layout)
+    car = fleet_arena
     base, t = int(state.round), 0
     while t < rounds:
         n = min(R, rounds - t)
         data, arena = stage_block(base + t, n)
-        fstate, mets = jloop(fstate, data, arena=arena)
+        if car is not None:
+            (fstate, car), mets = jloop((fstate, car), data, arena=arena)
+        else:
+            fstate, mets = jloop(fstate, data, arena=arena)
         mets = jax.tree.map(np.asarray, mets)
         for r in range(n):
             on_round(t + r, {k: v[r] for k, v in mets.items()})
@@ -178,6 +218,11 @@ def _run_fused(args, loop, state, rounds, stage_block, on_round):
 
 def train_lm(args):
     from repro.models import build_model
+    if getattr(args, "num_registered", None):
+        raise SystemExit("--num-registered (the fleet regime) is a "
+                         "paper-task feature: synthetic LM batches have "
+                         "no per-client partitions to map registered "
+                         "ids onto — use --task, not --arch")
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced(num_layers=args.layers, d_model=args.d_model)
@@ -306,15 +351,18 @@ def train_paper_task(args):
     from repro.models.small import accuracy, make_small_model, softmax_ce
     task = get_task(args.task, seed=args.seed)
     scn = _resolve_scenario(args)
+    num_reg, participation = _resolve_fleet(args, scn)
     fed = FederatedDataset.build(task, num_clients=args.num_clients,
                                  alpha=args.alpha, seed=args.seed,
-                                 scenario=scn)
+                                 scenario=scn, num_registered=num_reg)
     mcfg = {"mlp": MLP_SMALL, "mlp-wide": MLP_WIDE, "cnn": CNN_PAPER}[
         args.model]
     init_fn, logits_fn = make_small_model(mcfg)
     fl = FLConfig(client_opt=args.client_opt, server_opt=args.server_opt,
                   lr=args.lr, fedprox_mu=args.fedprox_mu,
-                  scenario=args.scenario, num_clients=args.num_clients)
+                  scenario=args.scenario, num_clients=args.num_clients,
+                  participation=participation,
+                  num_registered_clients=num_reg)
     copt = get_client_opt(fl.client_opt, fl)
     sopt = get_server_opt(fl.server_opt)
     loss_fn = make_loss(
@@ -328,9 +376,61 @@ def train_paper_task(args):
     state = init_fl_state(init_fn(jax.random.key(args.seed)), sopt, scn,
                           compression=comp, cohort=fl.clients_per_round)
     state = _maybe_resume(args, state)
-    stats = (_ScenarioStats(scn, args.num_clients)
-             if (scn or comp_active) else None)
+    stats = (_ScenarioStats(scn, fl.registered_clients)
+             if (scn or comp_active or fl.fleet) else None)
     t0 = time.time()
+
+    def log_fused_round(t, row):
+        if stats:
+            stats.update(None, row)
+        if t % max(1, args.rounds // 10) == 0 or t == args.rounds - 1:
+            fleet = (f" revisit {float(row['revisit_frac']):.2f}"
+                     if "revisit_frac" in row else "")
+            print(f"round {t:4d} loss {float(row['loss']):.4f} "
+                  f"eta {float(row['eta_mean']):.4f}{fleet}"
+                  f"{_health_str(row)} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+
+    if fl.fleet:
+        # fleet regime: the loop carries (FlatFLState, ClientArena) and
+        # draws its cohort over all C_registered candidates ON DEVICE —
+        # the same (seed, round)-keyed scheduler draw sample_block uses
+        # to gather data, so staged indices and arena rows agree. The
+        # host ships only (R, C, K, b) gather indices per block; the
+        # arena holds O(C_registered) scalars (plus the EF21 slab only
+        # under --error-feedback).
+        from repro.core import arena_gather, make_fleet_loop
+        from repro.federation import arena_init
+        loop = make_fleet_loop(
+            loss_fn, copt, sopt,
+            params_like=jax.eval_shape(init_fn, jax.random.key(args.seed)),
+            num_rounds=args.rounds, num_registered=fl.registered_clients,
+            rounds_per_call=max(1, args.rounds_per_call),
+            flat="pallas" if args.use_pallas else "xla", scenario=scn,
+            client_sizes=(jnp.asarray(fed.registered_sizes())
+                          if scn else None),
+            compression=comp, gather=arena_gather,
+            eta_carry=getattr(args, "eta_carry", False), seed=fed.seed)
+        use_ef = comp.error_feedback and comp.active(scn)
+        car = arena_init(fl.registered_clients, eta0=loop.eta0,
+                         ef_width=(loop.layout.padded_size if use_ef
+                                   else None))
+        arena = jax.tree.map(jnp.asarray, fed.arena())
+
+        def stage_block(round0, n):
+            idx, _, _ = fed.sample_block(fl.participation, K, args.batch,
+                                         round0=round0, rounds=n)
+            return jnp.asarray(idx), arena
+
+        state = _run_fused(args, loop, state, args.rounds, stage_block,
+                           log_fused_round, fleet_arena=car)
+        xt, yt = fed.test_batch(2000)
+        acc = float(accuracy(logits_fn(state.params, jnp.asarray(xt)),
+                             jnp.asarray(yt)))
+        print(f"final test-acc {acc:.4f}", flush=True)
+        if stats:
+            stats.report(args.out, extra={"final_acc": acc})
+        return state
 
     if args.rounds_per_call > 1:
         # round-fused path: stage the example arena on device ONCE and
@@ -355,17 +455,8 @@ def train_paper_task(args):
                                          round0=round0, rounds=n)
             return jnp.asarray(idx), arena
 
-        def log_round(t, row):
-            if stats:
-                stats.update(None, row)
-            if t % max(1, args.rounds // 10) == 0 or t == args.rounds - 1:
-                print(f"round {t:4d} loss {float(row['loss']):.4f} "
-                      f"eta {float(row['eta_mean']):.4f}"
-                      f"{_health_str(row)} "
-                      f"({time.time() - t0:.0f}s)", flush=True)
-
         state = _run_fused(args, loop, state, args.rounds, stage_block,
-                           log_round)
+                           log_fused_round)
         xt, yt = fed.test_batch(2000)
         acc = float(accuracy(logits_fn(state.params, jnp.asarray(xt)),
                              jnp.asarray(yt)))
@@ -424,6 +515,22 @@ def main():
     ap.add_argument("--rounds", type=int, default=100)
     ap.add_argument("--clients-per-round", type=int, default=4)
     ap.add_argument("--num-clients", type=int, default=100)
+    ap.add_argument("--num-registered", type=int, default=None,
+                    help="fleet regime (paper tasks): C_registered "
+                         "clients known to the server, sampled over by "
+                         "the schedulers; registered client i trains on "
+                         "data partition i %% num_clients. Defaults to "
+                         "the scenario's registered_hint (the fleet_* "
+                         "presets set 100k), else legacy "
+                         "registered == num_clients.")
+    ap.add_argument("--participation", type=float, default=None,
+                    help="participation rate p (|S_t| = p*C_registered); "
+                         "defaults to the scenario's participation_hint, "
+                         "else 0.1")
+    ap.add_argument("--eta-carry", action="store_true",
+                    help="fleet: warm-start a returning client's eta0 "
+                         "from its arena row instead of the scalar eta0 "
+                         "(off = Algorithm 1's per-round reset)")
     ap.add_argument("--alpha", type=float, default=0.1)
     ap.add_argument("--local-steps", type=int, default=4)
     ap.add_argument("--batch", type=int, default=64)

@@ -128,6 +128,72 @@ def fullprec_collective_report(hlo_text: str, *, max_elems: int,
             "sample": [ln.strip()[:160] for ln in bad[:4]]}
 
 
+# ---------------------------------------------------------------------------
+# fleet memory ceiling (repro.core.fed_loop.make_fleet_loop): only the
+# sampled cohort's client state may be materialized wider than a scalar
+# ---------------------------------------------------------------------------
+_ANY_SHAPE_RE = re.compile(r"\b(?:f32|bf16|f16|s32|u32|s8|u8|pred)"
+                           r"\[([0-9,]+)\]")
+
+
+def cohort_materialization_report(hlo_text: str, num_registered: int,
+                                  *, max_cols: int = 1) -> Dict:
+    """Tensors wider than O(C_registered) scalars in the compiled HLO.
+
+    The fleet loop's memory contract is that per-REGISTERED-client state
+    stays 1-D: the arena's (C_registered,) scalar rows are the ONLY
+    tensors allowed to carry the registered dimension, while everything
+    two-dimensional (parameter slabs, gradients, batches) is bounded by
+    the COHORT size C << C_registered. Any shape that contains the
+    registered dim alongside >= ``max_cols + 1`` other elements (default:
+    anything beyond a flat vector) means per-registered-client wide
+    state leaked into the program — e.g. a (C_registered, N) gather the
+    scheduler or arena scatter accidentally materialized. Returns
+    {"vectors": #O(C_registered) 1-D hits, "wide": #violations,
+    "sample": first few offending lines}.
+    """
+    vectors = wide = 0
+    sample = []
+    for ln in hlo_text.splitlines():
+        worst = None
+        for m in _ANY_SHAPE_RE.finditer(ln):
+            dims = [int(d) for d in m.group(1).split(",") if d]
+            if num_registered not in dims:
+                continue
+            cols = _elems(m.group(1)) // num_registered
+            worst = max(worst or 0, cols)
+        if worst is None:
+            continue
+        if worst > max_cols:
+            wide += 1
+            if len(sample) < 4:
+                sample.append(ln.strip()[:160])
+        else:
+            vectors += 1
+    return {"vectors": vectors, "wide": wide, "sample": sample}
+
+
+def assert_cohort_only_materialization(compiled, num_registered: int, *,
+                                       max_cols: int = 1) -> Dict:
+    """Raise AssertionError if the compiled fleet program materializes
+    any tensor wider than O(C_registered) scalars along the registered-
+    client dimension; returns the report otherwise.
+
+    ``max_cols`` relaxes the bound when wider per-registered-client
+    state is intentional (e.g. an EF21 arena slab is (C_registered, N)
+    by design — pass ``max_cols=N`` there, or skip the check: the
+    ceiling being asserted is exactly that NO such slab exists in the
+    EF-free configuration).
+    """
+    rep = cohort_materialization_report(compiled.as_text(),
+                                        num_registered, max_cols=max_cols)
+    assert rep["wide"] == 0, (
+        f"fleet memory ceiling violated: tensor(s) wider than "
+        f"({num_registered},)x{max_cols} materialized along the "
+        f"registered-client dim: {rep}")
+    return rep
+
+
 def assert_no_fullprec_delta_collective(compiled, C: int, N: int, *,
                                         mesh, federation,
                                         max_payload_elems=None) -> Dict:
