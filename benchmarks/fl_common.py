@@ -63,7 +63,8 @@ def run_fl(opt_name: str, task_id: str, *, alpha: Optional[float] = None,
            compression: Optional[str] = None,
            error_feedback: bool = False,
            robust_agg: Optional[str] = None,
-           quorum: Optional[int] = None) -> Dict:
+           quorum: Optional[int] = None,
+           telemetry: bool = False) -> Dict:
     """One FL training run; returns final test accuracy + timing.
 
     ``engine="flat"`` switches Δ-SGD runs onto the packed flat-parameter
@@ -84,7 +85,11 @@ def run_fl(opt_name: str, task_id: str, *, alpha: Optional[float] = None,
     keep the preset's choice — an explicit "mean" DOWNGRADES a robust
     preset to plain averaging, which the faults suite uses to show the
     undefended byzantine divergence). They promote a scenario-less run
-    to ``sync_iid``; faulty/robust scenarios force the flat engine."""
+    to ``sync_iid``; faulty/robust scenarios force the flat engine.
+
+    ``telemetry=True`` turns on the in-scan distribution plane
+    (repro.telemetry) — non-perturbing by contract, so the telemetry
+    bench suite times its overhead against this same run with it off."""
     scn = None
     scn_overrides = {}
     if robust_agg is not None:
@@ -135,7 +140,7 @@ def run_fl(opt_name: str, task_id: str, *, alpha: Optional[float] = None,
         loss_fn, copt, sopt, num_rounds=rounds, weighted=weighted,
         flat=flat, scenario=scn, num_clients=num_clients,
         client_sizes=fed.client_sizes() if scn is not None else None,
-        compression=comp))
+        compression=comp, telemetry=telemetry))
     from repro.federation.schedulers import cohort_size
     state = init_fl_state(init_fn(jax.random.key(seed)), sopt, scn,
                           compression=comp,

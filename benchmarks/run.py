@@ -667,6 +667,71 @@ def fleet(rounds=None):
     emit("fleet/sched_zipf_topk_100k", us, 0.0 if ok else 1.0)
 
 
+def telemetry(rounds=None):
+    """Telemetry plane suite (repro.telemetry + kernels/telemetry):
+    kernel-vs-jnp-reference parity for the distribution kernels
+    (derived = max |Δ|, exact 0 for integer histogram counts) and the
+    non-perturbing cost contract — the same flat round timed with the
+    telemetry plane off vs on. baseline.json normalizes
+    telemetry/round_on by round_off with a soft ceiling, so a
+    distribution reduction sneaking onto the step path (rather than
+    riding the round-end values) shows up as an overhead regression."""
+    del rounds
+    import jax
+    import jax.numpy as jnp
+    from repro.core import (get_client_opt, get_server_opt, init_fl_state,
+                            make_fl_round, make_loss)
+    from repro.kernels.telemetry import (lane_histogram, lane_histogram_ref,
+                                         lane_quantiles, lane_quantiles_ref)
+    from repro.telemetry import TelemetrySpec
+
+    rng = np.random.default_rng(0)
+    spec = TelemetrySpec(enabled=True)
+    edges = jnp.asarray(spec.eta_edges())
+    x = jnp.asarray(10.0 ** rng.uniform(-5.0, 2.0, size=256), jnp.float32)
+    us, h = _timeit(jax.jit(lambda v: lane_histogram(v, edges)), x)
+    emit("telemetry/lane_histogram_256", us,
+         float(jnp.abs(h - lane_histogram_ref(x, edges)).max()))
+    us, q = _timeit(jax.jit(lambda v: lane_quantiles(v)), x)
+    emit("telemetry/lane_quantiles_256", us,
+         float(jnp.abs(q - lane_quantiles_ref(x)).max()))
+
+    # overhead contract: one jitted flat round, off vs on. D is large
+    # enough that the grad evals dominate — the telemetry reductions
+    # run over (C,) round-end values, so their cost must NOT scale
+    # with the model and the ratio row stays near 1.0
+    D, C, K, B, T = 8192, 64, 2, 8, 8
+
+    def quad(params, batch):
+        r = batch["A"] @ params["x"] - batch["b"]
+        return 0.5 * jnp.mean(r * r), {}
+
+    loss = make_loss(quad)
+    copt = get_client_opt("delta_sgd")
+    sopt = get_server_opt("fedavg")
+    params = {"x": jnp.asarray(rng.normal(size=D), jnp.float32)}
+    data = {"A": jnp.asarray(rng.normal(size=(C, K, B, D)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(C, K, B)), jnp.float32)}
+    times = {}
+    for tag, tele in (("round_off", False), ("round_on", True)):
+        rnd = jax.jit(make_fl_round(loss, copt, sopt, num_rounds=T,
+                                    flat="xla", telemetry=tele))
+        st = init_fl_state(params, sopt)
+        st, met, _ = rnd(st, data)              # compile warmup
+        jax.block_until_ready(st.params["x"])
+        t0 = time.time()
+        for _ in range(T):
+            st, met, _ = rnd(st, data)
+        jax.block_until_ready(st.params["x"])
+        times[tag] = (time.time() - t0) / T * 1e6
+        # derived: distribution keys present exactly when enabled
+        want = {"eta_hist", "loss_deciles"} <= set(met)
+        emit(f"telemetry/{tag}", times[tag],
+             0.0 if want == tele else 1.0)
+    emit("telemetry/overhead_ratio", times["round_on"],
+         times["round_on"] / times["round_off"])
+
+
 ALL = {"table1": table1, "table2b": table2b, "table3": table3,
        "table4": table4, "fig4": fig4, "fig5": fig5,
        # convex keeps its own T=40 protocol; kernels/sharded/scenarios/
@@ -678,7 +743,8 @@ ALL = {"table1": table1, "table2b": table2b, "table3": table3,
        "compression": compression,
        "faults": faults,
        "rounds_fused": rounds_fused,
-       "fleet": fleet}
+       "fleet": fleet,
+       "telemetry": telemetry}
 
 
 def _write_csv(path: str = "bench_results.csv") -> None:

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # CI: docs-drift check (scripts/gen_docs.py) + tier-1 tests (exact
 # ROADMAP verify command) + kernels/sharded/scenarios/compression/
-# faults/rounds_fused/fleet benchmark smoke + benchmark-regression
-# guard (scenario/compression/fault/fleet rows are soft-baselined).
+# faults/rounds_fused/fleet/telemetry benchmark smoke + benchmark-
+# regression guard (scenario/compression/fault/fleet/telemetry rows
+# are soft-baselined).
 #
 # BENCH_GUARD=hard|soft|off (default hard): the guard compares
 # bench_results.csv against benchmarks/baseline.json — soft on the
@@ -14,8 +15,9 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 # (data, model) mesh (tests/test_flat.py needs8 cases + `sharded` bench)
 export XLA_FLAGS="${XLA_FLAGS:---xla_force_host_platform_device_count=8}"
 
-# docs drift: the scenario table in docs/SCENARIOS.md is generated
-# from the SCENARIOS registry — regenerate and fail on any diff
+# docs drift: the scenario table in docs/SCENARIOS.md and the metric
+# table in docs/TELEMETRY.md are generated from the SCENARIOS /
+# telemetry.schema registries — regenerate and fail on any diff
 python scripts/gen_docs.py
 git diff --exit-code -- docs/
 
@@ -24,7 +26,7 @@ git diff --exit-code -- docs/
 python -m pytest -x -q -m "not slow"
 python -m pytest -x -q -m slow
 python -m benchmarks.run \
-    --only kernels,sharded,scenarios,compression,faults,rounds_fused,fleet \
+    --only kernels,sharded,scenarios,compression,faults,rounds_fused,fleet,telemetry \
     --quick
 python -m benchmarks.compare bench_results.csv benchmarks/baseline.json \
     --mode "${BENCH_GUARD:-hard}"

@@ -219,6 +219,15 @@ class FLConfig:
     # partitions: registered client i trains on partition i % m
     # (virtual clients), so fleet scale never multiplies dataset memory.
     num_registered_clients: Optional[int] = None
+    # device-native telemetry plane (repro.telemetry): in-scan η
+    # histogram / loss deciles / guard counts. Read-only over round-end
+    # values — the trained trajectory is bit-exact on or off.
+    telemetry: bool = False
+
+    @property
+    def telemetry_spec(self):
+        from repro.telemetry import resolve_telemetry
+        return resolve_telemetry(self.telemetry)
 
     @property
     def compression_spec(self):

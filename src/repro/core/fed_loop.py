@@ -146,7 +146,7 @@ def make_fl_loop(loss_fn, client_opt, server_opt, *, params_like,
                  federation=None, scenario=None,
                  num_clients: Optional[int] = None, client_sizes=None,
                  compression=None, gather=None,
-                 block_sharded: bool = False):
+                 block_sharded: bool = False, telemetry=None):
     """Build the R-round fused loop.
 
     Returns ``loop_fn(fstate, round_data, client_weights=None,
@@ -191,6 +191,16 @@ def make_fl_loop(loss_fn, client_opt, server_opt, *, params_like,
     aggregation / quorum are not supported on the block path (their
     order-statistic tails need cross-client data movement) — use the
     per-round sharded engine for those.
+
+    ``telemetry`` (None/bool/repro.telemetry.TelemetrySpec): the
+    in-scan distribution block rides the scanned metrics — extra
+    fixed-shape leaves with a leading R axis, zero host syncs inside a
+    block, trajectory bit-exact on vs off. On the block-sharded path
+    the per-shard η-histogram counts join the existing packed per-round
+    psum (exact integer sums — still 2 collectives per round, and the
+    summed histogram equals the replicated engine's bit-for-bit);
+    ``loss_deciles`` is skipped there (a cross-client sort has no
+    shard-local form).
     """
     if not flat:
         raise ValueError("the round-fused loop requires the flat engine "
@@ -225,13 +235,13 @@ def make_fl_loop(loss_fn, client_opt, server_opt, *, params_like,
             weighted=weighted, flat=flat, mesh=mesh,
             federation=federation, scenario=scenario,
             num_clients=num_clients, client_sizes=client_sizes,
-            compression=compression, gather=gather)
+            compression=compression, gather=gather, telemetry=telemetry)
     round_fn = make_fl_round(loss_fn, client_opt, server_opt,
                              num_rounds=num_rounds, weighted=weighted,
                              flat=flat, mesh=mesh, federation=federation,
                              scenario=scenario, num_clients=num_clients,
                              client_sizes=client_sizes,
-                             compression=compression)
+                             compression=compression, telemetry=telemetry)
     body = getattr(round_fn, "flat_body", None)
     if body is None:  # pragma: no cover - make_fl_round always attaches it
         raise ValueError("make_fl_round returned no flat round body")
@@ -275,15 +285,16 @@ def _make_block_loop(loss_fn, client_opt, server_opt, *, params_like,
                      num_rounds: int, rounds_per_call: int,
                      weighted: bool, flat, mesh, federation,
                      scenario=None, num_clients=None, client_sizes=None,
-                     compression=None, gather=None):
+                     compression=None, gather=None, telemetry=None):
     """One shard_map around the whole R-round scan (client-axes-only
     sharding). Each device runs its C_loc clients' full local math —
     grad eval, the fused Δ-SGD kernel pair, delta compression — on a
     local (C_loc, N) slab; the mesh is entered once per BLOCK, and the
-    client-crossing traffic is 2 collectives per round — one (N+5,)
+    client-crossing traffic is 2 collectives per round — one packed
     psum carrying the (compressed) aggregate plus every scalar metric
-    sum, and one (2,) pmin for the η extrema. Per-client math is
-    therefore bit-identical
+    sum ((N+5,), widening to (N+5+B,) when telemetry appends its B
+    η-histogram bin counts), and one (2,) pmin for the η extrema.
+    Per-client math is therefore bit-identical
     to the replicated flat engine; the aggregate differs only by psum
     reassociation (<= ~1e-5 at f32, same tolerance the per-round
     sharded parity tests use). Scenario draws for all R rounds happen
@@ -297,8 +308,11 @@ def _make_block_loop(loss_fn, client_opt, server_opt, *, params_like,
     from repro.core.delta_sgd import (_shard_map, flat_delta_sgd_init,
                                       flat_delta_sgd_step)
     from repro.federation.heterogeneity import active_mask
+    from repro.kernels.telemetry import lane_histogram_ref
     from repro.models.common import scan_unroll
+    from repro.telemetry.spec import resolve_telemetry
 
+    tele = resolve_telemetry(telemetry)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
     hyper = client_opt.hyper
     if (client_opt.name != "delta_sgd" or hyper is None
@@ -459,6 +473,15 @@ def _make_block_loop(loss_fn, client_opt, server_opt, *, params_like,
                     loss_num, last_num, jnp.sum(S.eta),
                     jnp.sum(S.clips.astype(jnp.float32)),
                     jnp.sum((~S.valid).astype(jnp.float32))])
+                if tele.enabled:
+                    # per-shard η-histogram counts ride the SAME packed
+                    # psum (exact integer sums in f32, so the summed
+                    # histogram is bit-identical to the replicated
+                    # engine's) — the collective budget stays at 2/round
+                    scal = jnp.concatenate([
+                        scal,
+                        lane_histogram_ref(
+                            S.eta, jnp.asarray(tele.eta_edges()))])
                 ext = cpmin(jnp.stack([jnp.min(S.eta),
                                        -jnp.max(S.eta)]))
                 extra = {}
@@ -553,6 +576,10 @@ def _make_block_loop(loss_fn, client_opt, server_opt, *, params_like,
                     "eta_min": ext[0], "eta_max": -ext[1],
                     "eta_clip_rate": scal_g[3] / jnp.float32(C * K),
                     "nan_guard_rate": scal_g[4] / Cf}
+                if tele.enabled:
+                    metrics.update(eta_hist=scal_g[5:],
+                                   eta_clip_count=scal_g[3],
+                                   nan_guard_count=scal_g[4])
                 metrics.update(extra)
                 return new_st, metrics
 
@@ -591,7 +618,8 @@ def make_fleet_loop(loss_fn, client_opt, server_opt, *, params_like,
                     rounds_per_call: int = 8, weighted: bool = False,
                     flat="xla", scenario=None, client_sizes=None,
                     compression=None, gather=None, batch_index_fn=None,
-                    eta_carry: bool = False, seed: int = 0):
+                    eta_carry: bool = False, seed: int = 0,
+                    telemetry=None):
     """Fleet-scale fused loop: C_registered clients, only the sampled
     cohort materialized per round.
 
@@ -653,7 +681,7 @@ def make_fleet_loop(loss_fn, client_opt, server_opt, *, params_like,
     round_fn = make_fl_round(loss_fn, client_opt, server_opt,
                              num_rounds=num_rounds, weighted=weighted,
                              flat=flat, scenario=scenario,
-                             compression=compression)
+                             compression=compression, telemetry=telemetry)
     body = round_fn.flat_body
     layout = flatlib.layout_of(params_like, shards=1)
     if compression is not None or (

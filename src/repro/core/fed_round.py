@@ -192,7 +192,7 @@ def make_fl_round(loss_fn, client_opt: ClientOpt, server_opt: ServerOpt, *,
                   num_rounds: int, weighted: bool = False,
                   flat=False, mesh=None, federation=None,
                   scenario=None, num_clients: Optional[int] = None,
-                  client_sizes=None, compression=None):
+                  client_sizes=None, compression=None, telemetry=None):
     """loss_fn(params, batch, global_params, prev_params)->(loss, metrics).
 
     Returns round_fn(state, client_batches, client_weights=None,
@@ -216,7 +216,16 @@ def make_fl_round(loss_fn, client_opt: ClientOpt, server_opt: ServerOpt, *,
     module docstring. An inert spec (kind="none", no error feedback, no
     bandwidth-heterogeneous scenario) leaves every engine on its exact
     pre-compression code path, so results stay bit-exact.
+
+    ``telemetry`` (None/bool/repro.telemetry.TelemetrySpec): the in-scan
+    distribution block — per-round η histogram over client lanes, per-
+    client mean-loss deciles, absolute guard hit counts — added to the
+    round metrics as fixed-shape device arrays. Strictly read-only over
+    round-end values: the trajectory is bit-exact with telemetry on vs
+    off (tests/test_telemetry.py).
     """
+    from repro.telemetry.spec import resolve_telemetry, round_telemetry
+    tele = resolve_telemetry(telemetry)
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
     if (mesh is None) != (federation is None):
@@ -256,7 +265,7 @@ def make_fl_round(loss_fn, client_opt: ClientOpt, server_opt: ServerOpt, *,
                                 mesh=mesh, federation=federation,
                                 scenario=scenario, num_clients=num_clients,
                                 client_sizes=client_sizes,
-                                compression=compression)
+                                compression=compression, telemetry=tele)
 
     hetero = scenario is not None and scenario.heterogeneous
 
@@ -320,6 +329,10 @@ def make_fl_round(loss_fn, client_opt: ClientOpt, server_opt: ServerOpt, *,
 
         extra = _scenario_extras(scenario, state.round, C, num_clients,
                                  client_sizes, step_counts)
+        if tele.enabled:
+            # η may be NaN for non-Δ-SGD optimizers: NaN counts in no
+            # histogram bin, so the eta_hist simply reads all-zero there
+            extra.update(round_telemetry(tele, etas, losses))
         new_state, metrics = _finish_round(state, agg, losses, etas,
                                            server_opt,
                                            step_counts=step_counts,
@@ -333,7 +346,7 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
                      *, num_rounds: int, weighted: bool, backend: str,
                      mesh=None, federation=None, scenario=None,
                      num_clients=None, client_sizes=None,
-                     compression=None):
+                     compression=None, telemetry=None):
     """Flat-parameter Δ-SGD engine: one packed (C, N) buffer carries every
     leaf of every client's params through the K-step scan; two fused
     kernel launches per local step total. With ``mesh``/``federation``
@@ -359,6 +372,8 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
     ``round_fn.flat_body``, which is what the round-fused multi-round
     ``lax.scan`` (core/fed_loop.make_fl_loop) chains: fused and
     host-loop rounds are the same computation by construction."""
+    from repro.telemetry.spec import resolve_telemetry, round_telemetry
+    tele = resolve_telemetry(telemetry)
     hyper = client_opt.hyper
     if (client_opt.name != "delta_sgd" or hyper is None
             or hyper.get("groupwise")):
@@ -542,6 +557,17 @@ def _make_flat_round(grad_fn, client_opt: ClientOpt, server_opt: ServerOpt,
             eta_clip_rate=(jnp.sum(S.clips.astype(jnp.float32))
                            / jnp.float32(C * K)),
             nan_guard_rate=jnp.mean((~S.valid).astype(jnp.float32)))
+        if tele.enabled:
+            # in-scan distribution block (repro.telemetry): read-only
+            # over round-end values, so the trajectory is unperturbed.
+            # The Pallas kernels only run on the un-meshed pallas
+            # engine; meshed/pjit rounds use the jnp ref math (sharding
+            # constraints inside pallas_call don't compose), and the
+            # counts are exact integers either way.
+            extra.update(round_telemetry(
+                tele, S.eta, losses, S.clips, S.valid, backend=backend,
+                use_kernel=(backend == "pallas" and not sharded),
+                rep=rep))
 
         # survivor mask + byzantine factor for the fault/robust tails:
         # a client is excluded when its NaN guard latched, it dropped

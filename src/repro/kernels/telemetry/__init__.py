@@ -1,0 +1,11 @@
+"""Telemetry histogram/quantile kernels (own LAUNCHES namespace — the
+Δ-SGD 2-launch/step invariant is counted on kernels/delta_sgd and is
+untouched by telemetry)."""
+from .ref import (lane_histogram_ref, lane_quantiles_ref,
+                  quantile_indices)
+from .telemetry import (LAUNCHES, lane_histogram, lane_quantiles,
+                        launch_count, reset_launch_count)
+
+__all__ = ["LAUNCHES", "lane_histogram", "lane_quantiles",
+           "lane_histogram_ref", "lane_quantiles_ref",
+           "quantile_indices", "launch_count", "reset_launch_count"]

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the telemetry kernels.
+
+Both ops reduce a per-client (C,) vector — round-end Δ-SGD step sizes,
+per-client mean losses — into a fixed-shape distribution summary that
+can ride in the fused loop's scanned metrics block:
+
+  lane_histogram_ref  (C,) f32 + (B+1,) edges -> (B,) f32 counts.
+                      Bin b counts  edges[b] <= x < edges[b+1]; values
+                      outside every bin (including NaN — NaN fails both
+                      comparisons) count nowhere. Counts are exact
+                      small integers in f32, so kernel/ref/psum-summed
+                      results are bit-identical, not just close.
+  lane_quantiles_ref  (C,) f32 -> (Q,) f32 order statistics at the
+                      fractions q/(Q-1): sort, then index
+                      round(f*(C-1)) — Q=11 gives min, deciles, max.
+                      Defined for finite inputs (NaNs sort last and can
+                      displace the top quantiles).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantile_indices(C: int, Q: int = 11) -> tuple:
+    """Static sorted-order indices for the Q evenly spaced quantile
+    fractions of a C-element vector (nearest-rank with round-half-even,
+    matching np.round)."""
+    if C < 1 or Q < 2:
+        raise ValueError(f"need C >= 1 and Q >= 2, got C={C}, Q={Q}")
+    import numpy as np
+    return tuple(int(np.round(q * (C - 1) / (Q - 1))) for q in range(Q))
+
+
+def lane_histogram_ref(x: jnp.ndarray, edges) -> jnp.ndarray:
+    """(C,) values x (B+1,) ascending edges -> (B,) f32 counts."""
+    e = jnp.asarray(edges, jnp.float32)
+    xf = x.astype(jnp.float32)[None, :]                       # (1, C)
+    lo, hi = e[:-1, None], e[1:, None]                        # (B, 1)
+    return jnp.sum((xf >= lo) & (xf < hi), axis=1).astype(jnp.float32)
+
+
+def lane_quantiles_ref(x: jnp.ndarray, Q: int = 11) -> jnp.ndarray:
+    """(C,) values -> (Q,) f32 order statistics (min..max via deciles
+    at Q=11)."""
+    idx = quantile_indices(x.shape[0], Q)
+    xs = jnp.sort(x.astype(jnp.float32))
+    return xs[jnp.asarray(idx, jnp.int32)]

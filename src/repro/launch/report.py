@@ -41,15 +41,22 @@ def load(dirname):
 
 
 def dryrun_table(rows):
+    # .get() guards throughout: artifacts from older runs (or partial
+    # writes) may miss columns — a report renderer must degrade to "-",
+    # never raise over a missing key
     out = ["| arch | shape | mesh | fed | clients | compile | temp/dev "
            "(no-remat UB) | analytic/dev (remat) |",
            "|---|---|---|---|---|---|---|---|"]
     for r in rows:
         am = r.get("analytic_memory") or {}
+        mem = r.get("memory") or {}
+        compile_s = r.get("compile_s")
         out.append(
-            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
-            f"{r['federation']} | {r['clients']} | {r['compile_s']}s | "
-            f"{fmt_b(r['memory'].get('temp_size_in_bytes', 0))} | "
+            f"| {r.get('arch', '-')} | {r.get('shape', '-')} | "
+            f"{r.get('mesh', '-')} | "
+            f"{r.get('federation', '-')} | {r.get('clients', '-')} | "
+            f"{'-' if compile_s is None else f'{compile_s}s'} | "
+            f"{fmt_b(mem.get('temp_size_in_bytes', 0))} | "
             f"{fmt_b(am.get('total', 0))} |")
     return "\n".join(out)
 
@@ -59,17 +66,19 @@ def roofline_table(rows):
            "bottleneck | MODEL/HLO flops | dominant collective |",
            "|---|---|---|---|---|---|---|---|"]
     for r in rows:
-        if r["mesh"] != "16x16":
+        if r.get("mesh") != "16x16":
             continue
-        rl = r["roofline"]
-        if "note" in rl:
+        rl = r.get("roofline") or {}
+        if "note" in rl or "t_compute_s" not in rl:
             continue
         by = rl.get("coll_by_kind") or {}
         dom = max(by, key=by.get) if by else "-"
         out.append(
-            f"| {r['arch']} | {r['shape']} | {fmt_t(rl['t_compute_s'])} | "
+            f"| {r.get('arch', '-')} | {r.get('shape', '-')} | "
+            f"{fmt_t(rl['t_compute_s'])} | "
             f"{fmt_t(rl['t_memory_s'])} | {fmt_t(rl['t_collective_s'])} | "
-            f"**{rl['bottleneck']}** | {r['useful_flops_ratio']:.2f} | "
+            f"**{rl.get('bottleneck', '-')}** | "
+            f"{r.get('useful_flops_ratio', 0.0):.2f} | "
             f"{dom} ({fmt_b(by.get(dom, 0))}) |")
     return "\n".join(out)
 
@@ -108,46 +117,51 @@ def scenario_summary(name: str, ids_per_round, num_clients: int,
         if num_clients <= 10_000:
             out["cohort_histogram"] = h.tolist()
 
-    def agg(key, fn):
-        vals = [m[key] for m in metrics_per_round if key in m]
-        return fn(vals) if vals else None
+    # registry-driven aggregation: each MetricSpec's ``summaries``
+    # declares how its per-round stream folds into per-run report
+    # fields (repro.telemetry.schema is the single source of truth —
+    # register a metric there and it shows up here with no edit)
+    from repro.telemetry import schema
 
-    for key, fn, as_ in (("stale_mean", np.mean, "stale_mean"),
-                         ("stale_max", np.max, "stale_max"),
-                         ("k_eff_mean", np.mean, "k_eff_mean"),
-                         ("k_eff_min", np.min, "k_eff_min"),
-                         ("k_eff_max", np.max, "k_eff_max"),
-                         ("flushed", np.mean, "flush_rate"),
-                         # delta-compression wire telemetry
-                         # (repro.compression): per-round cohort payload
-                         # and its ratio vs full-precision f32 deltas
-                         ("wire_bytes", np.mean, "wire_bytes_round"),
-                         ("wire_bytes", np.sum, "wire_bytes_total"),
-                         ("comp_ratio", np.mean, "comp_ratio"),
-                         ("comp_level_mean", np.mean, "comp_level_mean"),
-                         # round-health telemetry
-                         # (repro.federation.faults): η-guard rates,
-                         # surviving-client mean, quorum skips
-                         ("eta_clip_rate", np.mean, "eta_clip_rate"),
-                         ("nan_guard_rate", np.mean, "nan_guard_rate"),
-                         ("valid_count", np.mean, "valid_mean"),
-                         ("round_skipped", np.sum, "skipped_rounds"),
-                         ("drop_frac", np.mean, "drop_frac"),
-                         ("byz_frac", np.mean, "byz_frac"),
-                         ("overstale_frac", np.mean, "overstale_frac"),
-                         ("agg_clip_rate", np.mean, "agg_clip_rate"),
-                         # fleet telemetry (core.fed_loop
-                         # .make_fleet_loop): cohort revisit rate, gap
-                         # since a returning client's last round, mean
-                         # carried η entering the round
-                         ("revisit_frac", np.mean, "revisit_frac"),
-                         ("realized_stale_mean", np.mean,
-                          "realized_stale_mean"),
-                         ("eta_carry_mean", np.mean, "eta_carry_mean")):
-        v = agg(key, fn)
-        if v is not None:
-            out[as_] = float(v)
+    reds = {"mean": np.mean, "sum": np.sum, "min": np.min, "max": np.max}
+    for spec in schema.specs():
+        vals = [m[spec.name] for m in metrics_per_round if spec.name in m]
+        if not vals:
+            continue
+        for out_name, red in spec.summaries:
+            if spec.shape == "()":
+                out[out_name] = float(reds[red](vals))
+            else:
+                # distribution vectors (η hist, loss deciles) fold
+                # elementwise across rounds and stay lists in the report
+                out[out_name] = reds[red](
+                    np.asarray(vals, np.float64), axis=0).tolist()
+    if "eta_hist" in out and len(out["eta_hist"]) >= 3:
+        from repro.telemetry.spec import TelemetrySpec
+        out["eta_hist_edges"] = [
+            float(e) for e in
+            TelemetrySpec(eta_bins=len(out["eta_hist"])).eta_edges()]
     return out
+
+
+def eta_hist_render(hist, edges, width: int = 40) -> str:
+    """ASCII bar rendering of a run-summed η histogram. First bin is
+    η < edges[1] underflow, last is overflow."""
+    hist = np.asarray(hist, np.float64)
+    total = hist.sum()
+    if total <= 0:
+        return "(empty η histogram)"
+    peak = hist.max()
+    lines = [f"η distribution ({total:.0f} client-rounds)"]
+    for i, n in enumerate(hist):
+        lo = edges[i] if i < len(edges) - 1 else edges[-2]
+        hi = edges[i + 1] if i + 1 < len(edges) else float("inf")
+        label = (f"<{hi:8.1e}" if i == 0
+                 else f">{lo:8.1e}" if not np.isfinite(hi)
+                 else f" {lo:8.1e}")
+        bar = "#" * int(round(width * n / peak)) if peak else ""
+        lines.append(f"  {label} |{bar} {n:.0f}")
+    return "\n".join(lines)
 
 
 def scenario_table(rows):
@@ -177,8 +191,9 @@ def scenario_table(rows):
         skips = (f"{r['skipped_rounds']:.0f}"
                  if "skipped_rounds" in r else "-")
         guard = (f"{r['eta_clip_rate']:.3f}/{r['nan_guard_rate']:.3f}"
-                 if "eta_clip_rate" in r else "-")
-        out.append(f"| {r['scenario']} | {r['rounds']} | {seen} | {share} "
+                 if "eta_clip_rate" in r and "nan_guard_rate" in r else "-")
+        out.append(f"| {r.get('scenario', '-')} | {r.get('rounds', '-')} "
+                   f"| {seen} | {share} "
                    f"| {stale} | {keff} | {flush} | {wire} | {ratio} "
                    f"| {vmean} | {skips} | {guard} |")
     return "\n".join(out)
@@ -199,6 +214,10 @@ def main():
     if scen:
         print(f"\n## Federation scenarios ({len(scen)} runs)\n")
         print(scenario_table(scen))
+        for r in scen:
+            if "eta_hist" in r and "eta_hist_edges" in r:
+                print(f"\n### {r.get('scenario', '-')}\n")
+                print(eta_hist_render(r["eta_hist"], r["eta_hist_edges"]))
 
 
 if __name__ == "__main__":

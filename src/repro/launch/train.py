@@ -113,30 +113,34 @@ def _resolve_fleet(args, scn):
 
 class _ScenarioStats:
     """Per-run accumulator for the scenario report (launch/report.py):
-    cohort ids per round + the scalar scenario/compression metrics the
-    round emits (wire bytes / compression ratio included)."""
-
-    KEYS = ("stale_mean", "stale_max", "k_eff_mean", "k_eff_min",
-            "k_eff_max", "flushed", "buffer_fill", "wire_bytes",
-            "comp_ratio", "comp_level_mean",
-            # round-health telemetry (repro.federation.faults)
-            "eta_clip_rate", "nan_guard_rate", "valid_count",
-            "round_skipped", "drop_frac", "byz_frac", "overstale_frac",
-            "agg_clip_rate",
-            # fleet telemetry (core.fed_loop.make_fleet_loop)
-            "revisit_frac", "realized_stale_mean", "eta_carry_mean")
+    cohort ids per round + every metric the round emits, routed through
+    the repro.telemetry.schema registry instead of a hardcoded key
+    whitelist — an unregistered producer key warns ONCE (the old KEYS
+    tuple silently discarded it) and is still kept, so nothing a round
+    reports can vanish between the engine and the report."""
 
     def __init__(self, scenario, num_clients):
         self.scenario, self.num_clients = scenario, num_clients
         self.ids, self.metrics = [], []
 
     def update(self, ids, metrics):
+        from repro.telemetry import schema
         if ids is not None:
             self.ids.append(np.asarray(ids))
         elif "cohort_ids" in metrics:
             self.ids.append(np.asarray(metrics["cohort_ids"]))
-        self.metrics.append(
-            {k: float(metrics[k]) for k in self.KEYS if k in metrics})
+        row = {}
+        for k, v in metrics.items():
+            if k == "cohort_ids":
+                continue        # carried in the ids stream above
+            spec = schema.get(k)
+            if spec is None:
+                schema.warn_unregistered(k, producer="round metrics")
+            if spec is not None and spec.shape != "()":
+                row[k] = np.asarray(v, np.float64)
+            else:
+                row[k] = float(v)
+        self.metrics.append(row)
 
     def summary(self):
         from repro.launch.report import scenario_summary
@@ -157,6 +161,65 @@ class _ScenarioStats:
         return s
 
 
+class _RoundLog:
+    """Buffered round log for the HOST loops: per-round metric rows stay
+    device arrays and are converted with ONE batched ``jax.device_get``
+    per ``--log-every`` interval, instead of the old per-round blocking
+    ``float(...)`` fan (which forced a host sync on every round, ~20
+    scalars at a time, right in the dispatch hot path). The converted
+    rows then feed the scenario stats and the JSONL event log."""
+
+    def __init__(self, log_every, stats=None, events=None):
+        self.log_every = max(1, int(log_every))
+        self.stats, self.events = stats, events
+        self._buf = []
+
+    def push(self, t, metrics, ids=None):
+        self._buf.append((t, ids, metrics))
+        if len(self._buf) >= self.log_every:
+            self.flush()
+
+    def flush(self):
+        if not self._buf:
+            return
+        rows = jax.device_get([m for _, _, m in self._buf])
+        for (t, ids, _), row in zip(self._buf, rows):
+            if self.stats is not None:
+                self.stats.update(ids, row)
+            if self.events is not None:
+                self.events.emit("round", t=t, **row)
+        if self.events is not None:
+            self.events.flush()
+        self._buf.clear()
+
+
+def _resolve_events(args):
+    """EventLog from --events (repro.telemetry.events), header stamped
+    with the full CLI config."""
+    if not getattr(args, "events", None):
+        return None
+    from repro.telemetry import EventLog
+    return EventLog(args.events, config=vars(args))
+
+
+def _log_every(args):
+    """--log-every N, 0 = legacy cadence (~10 intervals per run)."""
+    n = getattr(args, "log_every", 0)
+    return n if n > 0 else max(1, args.rounds // 10)
+
+
+def _finish_run(events, spans):
+    """Common tail: span summary into the event log + stdout."""
+    if spans is not None and spans.summary():
+        print(f"spans: {spans}", flush=True)
+    if events is not None:
+        if spans is not None:
+            events.emit("spans", **spans.summary())
+        events.close()
+        print(f"event log: {events.path} "
+              f"({events.events_written} events)", flush=True)
+
+
 def _health_str(m):
     """Compact round-health suffix for the round log. Fault-free legacy
     rounds emit none of the guard keys, so this stays empty and the log
@@ -173,7 +236,7 @@ def _health_str(m):
 
 
 def _run_fused(args, loop, state, rounds, stage_block, on_round,
-               fleet_arena=None):
+               fleet_arena=None, events=None, spans=None):
     """Drive the round-fused loop (repro.core.fed_loop) in R-round
     blocks on donated flat state. ``stage_block(round0, n) ->
     (round_data, arena)`` stages one block's batches (or arena gather
@@ -188,32 +251,100 @@ def _run_fused(args, loop, state, rounds, stage_block, on_round,
     (core.fed_loop.make_fleet_loop): the loop carries
     (FlatFLState, ClientArena). Checkpoints still save only the FLState
     half — a fleet --resume restarts the arena cold (η warm-starts and
-    participation counters reset; the global params/round do not)."""
+    participation counters reset; the global params/round do not).
+
+    Observability (repro.telemetry): the block is the host-sync
+    boundary — the ONLY host transfer per block is the single batched
+    metrics device_get after the block executes, and the JSONL
+    ``events`` sink flushes exactly there (tests/test_telemetry.py runs
+    a block under ``jax.transfer_guard("disallow")`` to pin this).
+    ``spans`` accumulates pack/stage/block_execute/convert/ckpt
+    wall-clock. ``--profile r`` profiles the block containing (1-based)
+    round r: an HLO-derived static telemetry row — collective count +
+    payload bytes per round (roofline.parse_collectives), Pallas launch
+    counts per namespace — is emitted at compile time via an AOT
+    lower+compile (one extra XLA compile, profiling runs only), and the
+    block executes under a ``jax.profiler`` trace written to
+    ``--profile-dir``."""
     from repro.checkpoint import save
     from repro.core import flatten_fl_state, unflatten_fl_state
+    from repro.telemetry import (SpanTimer, kernel_launch_snapshot,
+                                 reset_kernel_launches, static_telemetry,
+                                 trace_block)
+    if spans is None:
+        spans = SpanTimer()
     R = max(1, args.rounds_per_call)
     layout = loop.layout
     jloop = jax.jit(loop, donate_argnums=0)
-    fstate = flatten_fl_state(state, layout)
+    with spans.span("pack"):
+        fstate = flatten_fl_state(state, layout)
     car = fleet_arena
     base, t = int(state.round), 0
+    profile_round = getattr(args, "profile", 0)
+    profiled = False
     while t < rounds:
         n = min(R, rounds - t)
-        data, arena = stage_block(base + t, n)
+        with spans.span("stage"):
+            data, arena = stage_block(base + t, n)
+
+        do_profile = (profile_round > 0 and not profiled
+                      and t <= profile_round - 1 < t + n)
+        if do_profile:
+            reset_kernel_launches()
+            with spans.span("compile"):
+                if car is not None:
+                    lowered = jloop.lower((fstate, car), data, arena=arena)
+                else:
+                    lowered = jloop.lower(fstate, data, arena=arena)
+                launches = kernel_launch_snapshot()
+                compiled = lowered.compile()
+            static = static_telemetry(compiled, rounds=n,
+                                      launches=launches)
+            print("static telemetry:",
+                  json.dumps(static, default=str), flush=True)
+            if events is not None:
+                events.emit("static", **static)
+
+        def call(fs=fstate, c=car, d=data, a=arena):
+            if c is not None:
+                return jloop((fs, c), d, arena=a)
+            return jloop(fs, d, arena=a)
+
+        with spans.span("block_execute"):
+            if do_profile:
+                out = trace_block(call, getattr(args, "profile_dir",
+                                                "experiments/profile"))
+                profiled = True
+            else:
+                out = call()
         if car is not None:
-            (fstate, car), mets = jloop((fstate, car), data, arena=arena)
+            (fstate, car), mets = out
         else:
-            fstate, mets = jloop(fstate, data, arena=arena)
-        mets = jax.tree.map(np.asarray, mets)
+            fstate, mets = out
+        # the block boundary is the host-sync point: ONE batched
+        # device_get for all R rounds' metric rows
+        with spans.span("convert"):
+            mets = jax.device_get(mets)
         for r in range(n):
-            on_round(t + r, {k: v[r] for k, v in mets.items()})
+            row = {k: v[r] for k, v in mets.items()}
+            on_round(t + r, row)
+            if events is not None:
+                events.emit("round", t=t + r, round=base + t + r, **row)
+        if events is not None:
+            events.flush()
         t += n
         cadence_hit = any(t0 % args.ckpt_every == 0
                           for t0 in range(t - n, t))
         if args.ckpt_dir and (cadence_hit or t >= rounds):
-            boundary = unflatten_fl_state(fstate, layout)
-            save(args.ckpt_dir, boundary, step=int(boundary.round))
-    return unflatten_fl_state(fstate, layout)
+            with spans.span("ckpt"):
+                boundary = unflatten_fl_state(fstate, layout)
+                save(args.ckpt_dir, boundary, step=int(boundary.round))
+    if profile_round > 0 and not profiled:
+        print(f"--profile {profile_round}: no block contained that "
+              f"round (run is {rounds} rounds); no trace captured",
+              flush=True)
+    with spans.span("unpack"):
+        return unflatten_fl_state(fstate, layout)
 
 
 def train_lm(args):
@@ -228,6 +359,7 @@ def train_lm(args):
         cfg = cfg.reduced(num_layers=args.layers, d_model=args.d_model)
     model = build_model(cfg, jnp.float32)
     scn = _resolve_scenario(args)
+    telemetry = getattr(args, "telemetry", False)
     fl = FLConfig(local_steps=args.local_steps, client_opt=args.client_opt,
                   server_opt=args.server_opt, lr=args.lr,
                   fedprox_mu=args.fedprox_mu, scenario=args.scenario,
@@ -250,7 +382,10 @@ def train_lm(args):
     # restart from the beginning after a crash)
     round_rng = lambda r: np.random.default_rng((args.seed, int(r)))
     stats = (_ScenarioStats(scn, args.num_clients)
-             if (scn or comp_active) else None)
+             if (scn or comp_active or telemetry) else None)
+    events = _resolve_events(args)
+    from repro.telemetry import SpanTimer
+    spans = SpanTimer()
 
     extras = {}
     if cfg.encoder_layers:
@@ -260,9 +395,7 @@ def train_lm(args):
 
     t0 = time.time()
 
-    def log_round(t, metrics):
-        if stats:
-            stats.update(None, metrics)
+    def print_round(t, metrics):
         if t % max(1, args.rounds // 10) == 0 or t == args.rounds - 1:
             wire = (f" wire {float(metrics['wire_bytes'])/1e6:.2f}MB "
                     f"(x{float(metrics['comp_ratio']):.2f})"
@@ -272,6 +405,13 @@ def train_lm(args):
                   f"{_health_str(metrics)} "
                   f"({time.time() - t0:.0f}s)", flush=True)
 
+    def log_round(t, metrics):
+        # fused-path consumer: rows arrive host-side already (one
+        # batched device_get per block in _run_fused)
+        if stats:
+            stats.update(None, metrics)
+        print_round(t, metrics)
+
     if args.rounds_per_call > 1:
         from repro.core import make_fl_loop
         loop = make_fl_loop(loss_fn, copt, sopt, params_like=params,
@@ -279,7 +419,7 @@ def train_lm(args):
                             rounds_per_call=args.rounds_per_call,
                             flat="pallas" if args.use_pallas else "xla",
                             scenario=scn, num_clients=args.num_clients,
-                            compression=comp)
+                            compression=comp, telemetry=telemetry)
 
         def stage_block(round0, n):
             blocks = [lm_round_batches(round_rng(round0 + i),
@@ -294,16 +434,19 @@ def train_lm(args):
             return stacked, None
 
         state = _run_fused(args, loop, state, args.rounds, stage_block,
-                           log_round)
+                           log_round, events=events, spans=spans)
         if stats:
             stats.report(args.out)
+        _finish_run(events, spans)
         return state
 
     round_fn = jax.jit(make_fl_round(loss_fn, copt, sopt,
                                      num_rounds=args.rounds, flat=flat,
                                      scenario=scn,
                                      num_clients=args.num_clients,
-                                     compression=comp))
+                                     compression=comp,
+                                     telemetry=telemetry))
+    rlog = _RoundLog(_log_every(args), stats=stats, events=events)
     for t in range(args.rounds):
         # keyed on state.round, not the loop index, for the same
         # resume-replay reason as the paper-task cohort draw below
@@ -314,10 +457,16 @@ def train_lm(args):
                                    vocab=cfg.vocab_size, extras=extras)
         batches = jax.tree.map(jnp.asarray, batches)
         state, metrics, _ = round_fn(state, batches)
-        log_round(t, metrics)
+        # metric rows stay on device: _RoundLog batches the host
+        # conversion once per --log-every interval; only the sparse
+        # print cadence below touches individual scalars
+        rlog.push(t, metrics)
+        print_round(t, metrics)
         _maybe_ckpt(args, state, t, final=(t == args.rounds - 1))
+    rlog.flush()
     if stats:
         stats.report(args.out)
+    _finish_run(events, None)
     return state
 
 
@@ -351,6 +500,7 @@ def train_paper_task(args):
     from repro.models.small import accuracy, make_small_model, softmax_ce
     task = get_task(args.task, seed=args.seed)
     scn = _resolve_scenario(args)
+    telemetry = getattr(args, "telemetry", False)
     num_reg, participation = _resolve_fleet(args, scn)
     fed = FederatedDataset.build(task, num_clients=args.num_clients,
                                  alpha=args.alpha, seed=args.seed,
@@ -377,7 +527,11 @@ def train_paper_task(args):
                           compression=comp, cohort=fl.clients_per_round)
     state = _maybe_resume(args, state)
     stats = (_ScenarioStats(scn, fl.registered_clients)
-             if (scn or comp_active or fl.fleet) else None)
+             if (scn or comp_active or fl.fleet or telemetry)
+             else None)
+    events = _resolve_events(args)
+    from repro.telemetry import SpanTimer
+    spans = SpanTimer()
     t0 = time.time()
 
     def log_fused_round(t, row):
@@ -410,7 +564,8 @@ def train_paper_task(args):
             client_sizes=(jnp.asarray(fed.registered_sizes())
                           if scn else None),
             compression=comp, gather=arena_gather,
-            eta_carry=getattr(args, "eta_carry", False), seed=fed.seed)
+            eta_carry=getattr(args, "eta_carry", False), seed=fed.seed,
+            telemetry=telemetry)
         use_ef = comp.error_feedback and comp.active(scn)
         car = arena_init(fl.registered_clients, eta0=loop.eta0,
                          ef_width=(loop.layout.padded_size if use_ef
@@ -423,13 +578,16 @@ def train_paper_task(args):
             return jnp.asarray(idx), arena
 
         state = _run_fused(args, loop, state, args.rounds, stage_block,
-                           log_fused_round, fleet_arena=car)
-        xt, yt = fed.test_batch(2000)
-        acc = float(accuracy(logits_fn(state.params, jnp.asarray(xt)),
-                             jnp.asarray(yt)))
+                           log_fused_round, fleet_arena=car,
+                           events=events, spans=spans)
+        with spans.span("eval"):
+            xt, yt = fed.test_batch(2000)
+            acc = float(accuracy(logits_fn(state.params, jnp.asarray(xt)),
+                                 jnp.asarray(yt)))
         print(f"final test-acc {acc:.4f}", flush=True)
         if stats:
             stats.report(args.out, extra={"final_acc": acc})
+        _finish_run(events, spans)
         return state
 
     if args.rounds_per_call > 1:
@@ -447,7 +605,8 @@ def train_paper_task(args):
             flat="pallas" if args.use_pallas else "xla", scenario=scn,
             num_clients=args.num_clients,
             client_sizes=fed.client_sizes() if scn else None,
-            compression=comp, gather=arena_gather)
+            compression=comp, gather=arena_gather,
+            telemetry=telemetry)
         arena = jax.tree.map(jnp.asarray, fed.arena())
 
         def stage_block(round0, n):
@@ -456,20 +615,23 @@ def train_paper_task(args):
             return jnp.asarray(idx), arena
 
         state = _run_fused(args, loop, state, args.rounds, stage_block,
-                           log_fused_round)
-        xt, yt = fed.test_batch(2000)
-        acc = float(accuracy(logits_fn(state.params, jnp.asarray(xt)),
-                             jnp.asarray(yt)))
+                           log_fused_round, events=events, spans=spans)
+        with spans.span("eval"):
+            xt, yt = fed.test_batch(2000)
+            acc = float(accuracy(logits_fn(state.params, jnp.asarray(xt)),
+                                 jnp.asarray(yt)))
         print(f"final test-acc {acc:.4f}", flush=True)
         if stats:
             stats.report(args.out, extra={"final_acc": acc})
+        _finish_run(events, spans)
         return state
 
     round_fn = jax.jit(make_fl_round(
         loss_fn, copt, sopt, num_rounds=args.rounds, flat=flat,
         scenario=scn, num_clients=args.num_clients,
         client_sizes=fed.client_sizes() if scn else None,
-        compression=comp))
+        compression=comp, telemetry=telemetry))
+    rlog = _RoundLog(_log_every(args), stats=stats, events=events)
     for t in range(args.rounds):
         # key the host-side cohort draw on the ROUND COUNTER IN THE
         # STATE, not the loop index: after --resume the loop restarts at
@@ -482,23 +644,28 @@ def train_paper_task(args):
         batches = {"x": jnp.asarray(batches["x"]),
                    "y": jnp.asarray(batches["y"])}
         state, metrics, _ = round_fn(state, batches)
-        if stats:
-            stats.update(ids, metrics)
+        # device rows buffer in _RoundLog (one batched device_get per
+        # --log-every interval); only the sparse eval/print cadence
+        # below syncs individual scalars
+        rlog.push(t, metrics, ids=ids)
         _maybe_ckpt(args, state, t, final=(t == args.rounds - 1))
         if t % max(1, args.rounds // 10) == 0 or t == args.rounds - 1:
-            xt, yt = fed.test_batch(2000)
-            acc = accuracy(logits_fn(state.params, jnp.asarray(xt)),
-                           jnp.asarray(yt))
+            with spans.span("eval"):
+                xt, yt = fed.test_batch(2000)
+                acc = accuracy(logits_fn(state.params, jnp.asarray(xt)),
+                               jnp.asarray(yt))
             print(f"round {t:4d} loss {float(metrics['loss']):.4f} "
                   f"test-acc {float(acc):.4f} "
                   f"eta {float(metrics['eta_mean']):.4f}"
                   f"{_health_str(metrics)} "
                   f"({time.time() - t0:.0f}s)", flush=True)
+    rlog.flush()
     if stats:
         xt, yt = fed.test_batch(2000)
         acc = float(accuracy(logits_fn(state.params, jnp.asarray(xt)),
                              jnp.asarray(yt)))
         stats.report(args.out, extra={"final_acc": acc})
+    _finish_run(events, None)
     return state
 
 
@@ -575,7 +742,30 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--telemetry", action="store_true",
+                    help="in-scan telemetry block (repro.telemetry): "
+                         "per-round eta histogram, loss deciles, guard "
+                         "hit counts ride the round metrics — "
+                         "trajectory stays bit-exact")
+    ap.add_argument("--log-every", type=int, default=0,
+                    help="host-loop metric conversion interval (rounds "
+                         "per batched device_get); 0 = ~10 per run")
+    ap.add_argument("--events", default=None,
+                    help="write a structured JSONL event log here "
+                         "(header: config hash, git sha, jax versions; "
+                         "flushed once per block boundary)")
+    ap.add_argument("--profile", type=int, default=0,
+                    help="profile the fused block containing this "
+                         "(1-based) round: jax.profiler trace to "
+                         "--profile-dir + an HLO-derived static "
+                         "telemetry row (collectives/round, pallas "
+                         "launch counts); needs --rounds-per-call > 1")
+    ap.add_argument("--profile-dir", default="experiments/profile",
+                    help="jax.profiler trace output directory")
     args = ap.parse_args()
+    if args.profile and args.rounds_per_call <= 1:
+        ap.error("--profile needs the round-fused engine: pass "
+                 "--rounds-per-call > 1")
     if args.arch:
         train_lm(args)
     elif args.task:

@@ -1,0 +1,31 @@
+"""Device-native telemetry plane: observe without perturbing.
+
+Four pieces (PR 8):
+
+  * :mod:`repro.telemetry.schema` — typed metric registry every
+    producer registers into; renders ``docs/TELEMETRY.md``.
+  * :mod:`repro.telemetry.spec` — :class:`TelemetrySpec` trace-time
+    switch + :func:`round_telemetry`, the in-scan distribution block
+    (η histogram, loss deciles, guard hit counts) that rides the fused
+    loop's (R, ·) metrics stack. Read-only over round-end values:
+    trajectories are bit-exact with telemetry on vs off.
+  * :mod:`repro.telemetry.events` — buffered JSONL sink with a run
+    metadata header, flushed once per block boundary (zero per-round
+    host syncs inside a block).
+  * :mod:`repro.telemetry.spans` / :mod:`repro.telemetry.profiling` —
+    span wall-clock accounting and ``jax.profiler`` / compile-time
+    static telemetry hooks for ``--profile``.
+"""
+from . import schema
+from .events import EventLog, config_hash, load_events, run_metadata
+from .profiling import (kernel_launch_snapshot, reset_kernel_launches,
+                        static_telemetry, trace_block)
+from .spans import SpanTimer
+from .spec import TelemetrySpec, resolve_telemetry, round_telemetry
+
+__all__ = [
+    "schema", "EventLog", "config_hash", "load_events", "run_metadata",
+    "kernel_launch_snapshot", "reset_kernel_launches", "static_telemetry",
+    "trace_block", "SpanTimer", "TelemetrySpec", "resolve_telemetry",
+    "round_telemetry",
+]

@@ -1,0 +1,129 @@
+"""Host-side structured event log: a buffered JSONL sink.
+
+Line 1 is a run-metadata header (config hash, git sha, mesh, jax /
+backend versions); every later line is one event dict with a ``kind``
+field. ``emit()`` only appends to an in-memory buffer — device arrays
+included, UNCONVERTED — and ``flush()`` does the single host sync +
+write. The drivers flush at block boundaries only, so the fused hot
+loop stays free of per-round host transfers (the zero-host-sync test
+in tests/test_telemetry.py runs a fused block under
+``jax.transfer_guard("disallow")``).
+
+Consumed by ``launch/report.py`` (``load_events``) and the bench
+suites.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import subprocess
+import time
+from typing import Any, Dict, Optional
+
+
+def config_hash(config: Optional[dict]) -> str:
+    """Stable short hash of a (JSON-able) run config."""
+    if not config:
+        return ""
+    blob = json.dumps(config, sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=5,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip()
+    except Exception:
+        return ""
+
+
+def run_metadata(config: Optional[dict] = None,
+                 mesh: Any = None) -> Dict[str, Any]:
+    """The header payload: enough to tie an event stream back to the
+    exact code + config + runtime that produced it."""
+    import jax
+    meta: Dict[str, Any] = {
+        "kind": "header",
+        "time": time.time(),
+        "git_sha": git_sha(),
+        "config_hash": config_hash(config),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "mesh": (dict(zip((str(a) for a in mesh.axis_names),
+                          (int(s) for s in mesh.devices.shape)))
+                 if mesh is not None else None),
+    }
+    if config:
+        meta["config"] = config
+    return meta
+
+
+def _jsonable(v):
+    """Device/np leaves -> plain python at FLUSH time (the only host
+    sync in the pipeline)."""
+    import numpy as np
+    if hasattr(v, "ndim"):        # jax / np array
+        a = np.asarray(v)
+        return a.item() if a.ndim == 0 else a.tolist()
+    if isinstance(v, (np.generic,)):
+        return v.item()
+    return v
+
+
+class EventLog:
+    """Buffered JSONL event sink; see module docstring.
+
+    Usable as a context manager; ``close()`` flushes. ``emit()`` is
+    sync-free by contract: values (device arrays included) are stored
+    as-is and converted in ``flush()``."""
+
+    def __init__(self, path: str, *, config: Optional[dict] = None,
+                 mesh: Any = None):
+        self.path = path
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        self._buf: list = []
+        self._f = open(path, "w", encoding="utf-8")
+        self._f.write(json.dumps(run_metadata(config, mesh),
+                                 default=str) + "\n")
+        self._f.flush()
+        self.events_written = 0
+
+    def emit(self, kind: str, **fields) -> None:
+        self._buf.append((kind, fields))
+
+    def flush(self) -> int:
+        """Convert + write every buffered event; returns the count."""
+        n = len(self._buf)
+        for kind, fields in self._buf:
+            row = {"kind": kind}
+            row.update({k: _jsonable(v) for k, v in fields.items()})
+            self._f.write(json.dumps(row, default=str) + "\n")
+        self._buf.clear()
+        self._f.flush()
+        self.events_written += n
+        return n
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self.flush()
+            self._f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def load_events(path: str):
+    """-> (header dict, [event dicts]) from a JSONL artifact."""
+    with open(path, encoding="utf-8") as f:
+        lines = [json.loads(ln) for ln in f if ln.strip()]
+    if not lines or lines[0].get("kind") != "header":
+        raise ValueError(f"{path}: missing event-log header line")
+    return lines[0], lines[1:]
