@@ -732,6 +732,98 @@ def telemetry(rounds=None):
          times["round_on"] / times["round_off"])
 
 
+def serving(rounds=None):
+    """Serving-plane suite (repro.serving): the fused scan decode vs
+    the legacy per-token host loop (derived on the fused row = token
+    mismatches vs the host loop — must be 0), the load generator's
+    throughput / latency percentiles / occupancy under a closed loop,
+    and the checkpoint hot-swap stall (save two rounds into a tempdir,
+    start serving round 1, publish round 2 mid-run: derived = swaps
+    observed, must be 1; us = notice-to-serving stall)."""
+    import shutil
+    import tempfile
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving import (DecodeEngine, ModelRegistry, Workload,
+                               greedy_decode, run_load)
+
+    quick = rounds is not None and rounds <= 25
+    cfg = get_config("tinyllama-1.1b").reduced()
+    model = build_model(cfg, jnp.float32)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    B, S, G = 4, 32, 16 if quick else 32
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                                (B, S)), jnp.int32)}
+    cache_len = S + G
+    prefill = jax.jit(lambda p, b: model.prefill(p, b,
+                                                 cache_len=cache_len))
+    logits, cache0 = prefill(params, batch)
+    tok0 = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+
+    # legacy host loop: one dispatch + one implicit sync per token
+    step = jax.jit(lambda p, c, t: model.decode_step(p, c, t))
+
+    def host_loop():
+        c, t, out = cache0, tok0, [tok0]
+        for _ in range(G - 1):
+            lg, c = step(params, c, t)
+            t = jnp.argmax(lg, -1).astype(jnp.int32)
+            out.append(t)
+        return jnp.concatenate(out, 1)
+
+    us_host, ref = _timeit(host_loop, n=3)
+    us_host /= G                          # per decoded token
+    emit("serving/decode_host_loop", us_host, 0.0)
+
+    fused = jax.jit(lambda p, c, t: greedy_decode(model, p, c, t, G - 1))
+    us_fused, (toks, _, _) = _timeit(fused, params, cache0, tok0, n=3)
+    us_fused /= G
+    got = np.concatenate([np.asarray(tok0), np.asarray(toks)], axis=1)
+    mismatch = int((np.asarray(ref) != got).sum())
+    emit("serving/decode_fused", us_fused, float(mismatch))
+    emit("serving/decode_fused_speedup", us_fused,
+         us_host / max(us_fused, 1e-9))
+
+    # load generator: closed loop at the pool's concurrency
+    eng = DecodeEngine(model, params, slots=B, cache_len=cache_len,
+                       flush_tokens=8)
+    wl = Workload(num_requests=8 if quick else 16, arrival="closed",
+                  concurrency=B, prompt_lens=(S // 2, S),
+                  gen_lens=(G // 2, G), seed=0)
+    rep = run_load(eng, wl, cfg.vocab_size)
+    emit("serving/loadgen_tok_per_s", rep["wall_s"] * 1e6,
+         rep["tok_per_s"])
+    emit("serving/latency_p50", rep["p50_s"] * 1e6, 0.0)
+    emit("serving/latency_p99", rep["p99_s"] * 1e6, 0.0)
+    emit("serving/occupancy", rep["wall_s"] * 1e6, rep["occupancy"])
+
+    # hot-swap stall: publish a newer round under live traffic
+    tmp = tempfile.mkdtemp(prefix="bench_serving_ckpt_")
+    try:
+        from repro.checkpoint import save
+        save(tmp, model.init(jax.random.key(1)), step=1)
+        reg = ModelRegistry(tmp, params)
+        eng = DecodeEngine(model, params, slots=B, cache_len=cache_len,
+                           flush_tokens=4, registry=reg)
+        for i in range(B):
+            eng.submit(rng.integers(0, cfg.vocab_size, (S,))
+                       .astype(np.int32), G)
+        eng.step()
+        save(tmp, model.init(jax.random.key(2)), step=2)
+        eng.run_until_idle()
+        m = eng.metrics()
+        # swaps counts only the MID-RUN publish (round 1 was the
+        # engine's initial version, staged before traffic)
+        emit("serving/swap_stall", m["serve_swap_stall_max"] * 1e6,
+             float(m["serve_swaps_total"]))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 ALL = {"table1": table1, "table2b": table2b, "table3": table3,
        "table4": table4, "fig4": fig4, "fig5": fig5,
        # convex keeps its own T=40 protocol; kernels/sharded/scenarios/
@@ -744,7 +836,8 @@ ALL = {"table1": table1, "table2b": table2b, "table3": table3,
        "faults": faults,
        "rounds_fused": rounds_fused,
        "fleet": fleet,
-       "telemetry": telemetry}
+       "telemetry": telemetry,
+       "serving": serving}
 
 
 def _write_csv(path: str = "bench_results.csv") -> None:

@@ -1,6 +1,8 @@
-"""Scenario: batched serving — prefill a prompt batch, then greedy-decode,
+"""Scenario: continuous-batching serving — submit a prompt batch to the
+repro.serving.DecodeEngine and greedy-decode it in fused flush blocks,
 for any assigned architecture including the recurrent ones (O(1)-state
-decode for Mamba2/xLSTM) and the sliding-window long-context path.
+decode for Mamba2/xLSTM), encoder/VLM archs (per-request frames /
+image_embeds), and the sliding-window long-context path.
 
   PYTHONPATH=src python examples/serve_decode.py --arch zamba2-7b --window 64
 """
@@ -13,6 +15,7 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.models import build_model
+from repro.serving import DecodeEngine, ModelRegistry
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", choices=ARCH_IDS, default="zamba2-7b")
@@ -20,47 +23,52 @@ ap.add_argument("--batch", type=int, default=2)
 ap.add_argument("--prompt-len", type=int, default=48)
 ap.add_argument("--gen", type=int, default=16)
 ap.add_argument("--window", type=int, default=None)
+ap.add_argument("--flush-tokens", type=int, default=8)
 ap.add_argument("--ckpt-dir", default=None,
                 help="load params from a checkpoint (training FLState "
-                     "checkpoints work via repro.checkpoint.restore_params)")
+                     "checkpoints work via repro.checkpoint."
+                     "restore_params) and hot-swap newer rounds")
 args = ap.parse_args()
 
 cfg = get_config(args.arch).reduced()
 model = build_model(cfg)
 params = model.init(jax.random.key(0))
+registry = None
 if args.ckpt_dir:
-    from repro.checkpoint import restore_params
-    params, step0 = restore_params(args.ckpt_dir, params)
-    print(f"loaded params from {args.ckpt_dir} step {step0}")
+    registry = ModelRegistry(args.ckpt_dir, params)
+    staged = registry.poll()
+    if staged is not None:
+        params = staged.params
+        print(f"loaded params from {args.ckpt_dir} step {staged.step}")
 rng = np.random.default_rng(0)
-
-batch = {"tokens": jnp.asarray(
-    rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
-    jnp.int32)}
-if cfg.encoder_layers:
-    batch["frames"] = jnp.asarray(rng.normal(
-        size=(args.batch, cfg.encoder_seq, cfg.d_model)), jnp.float32)
-if cfg.num_image_tokens:
-    batch["image_embeds"] = jnp.asarray(rng.normal(
-        size=(args.batch, cfg.num_image_tokens, cfg.d_model)), jnp.float32)
 
 cache_len = (cfg.num_image_tokens or 0) + args.prompt_len + args.gen
 if args.window:
     cache_len = min(cache_len, args.window)
 
-logits, cache = jax.jit(lambda p, b: model.prefill(
-    p, b, cache_len=cache_len, window=args.window))(params, batch)
-step = jax.jit(lambda p, c, t: model.decode_step(p, c, t,
-                                                 window=args.window))
+engine = DecodeEngine(model, params, slots=args.batch,
+                      cache_len=cache_len,
+                      flush_tokens=args.flush_tokens,
+                      window=args.window,
+                      version=registry.version or 0 if registry else 0,
+                      registry=registry)
+rids = []
+for _ in range(args.batch):
+    extras = {}
+    if cfg.encoder_layers:
+        extras["frames"] = rng.normal(
+            size=(cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+    if cfg.num_image_tokens:
+        extras["image_embeds"] = rng.normal(
+            size=(cfg.num_image_tokens, cfg.d_model)).astype(np.float32)
+    prompt = rng.integers(0, cfg.vocab_size,
+                          (args.prompt_len,)).astype(np.int32)
+    rids.append(engine.submit(prompt, args.gen, extras=extras or None))
 
-tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-out = [tok]
 t0 = time.time()
-for _ in range(args.gen - 1):
-    logits, cache = step(params, cache, tok)
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    out.append(tok)
+done = {c.request_id: c.tokens for c in engine.run_until_idle()}
 dt = time.time() - t0
-print(f"{args.arch}: generated {args.gen}x{args.batch} tokens "
+print(f"{args.arch}: generated {args.gen}x{args.batch} tokens in "
+      f"{engine.stats['flushes']} flushes "
       f"({args.gen * args.batch / max(dt, 1e-9):.1f} tok/s)")
-print("first row:", np.asarray(jnp.concatenate(out, 1))[0][:12].tolist())
+print("first row:", done[rids[0]][:12].tolist())

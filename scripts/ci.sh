@@ -1,9 +1,9 @@
 #!/usr/bin/env bash
 # CI: docs-drift check (scripts/gen_docs.py) + tier-1 tests (exact
 # ROADMAP verify command) + kernels/sharded/scenarios/compression/
-# faults/rounds_fused/fleet/telemetry benchmark smoke + benchmark-
-# regression guard (scenario/compression/fault/fleet/telemetry rows
-# are soft-baselined).
+# faults/rounds_fused/fleet/telemetry/serving benchmark smoke +
+# benchmark-regression guard (scenario/compression/fault/fleet/
+# telemetry/serving rows are soft-baselined).
 #
 # BENCH_GUARD=hard|soft|off (default hard): the guard compares
 # bench_results.csv against benchmarks/baseline.json — soft on the
@@ -26,7 +26,7 @@ git diff --exit-code -- docs/
 python -m pytest -x -q -m "not slow"
 python -m pytest -x -q -m slow
 python -m benchmarks.run \
-    --only kernels,sharded,scenarios,compression,faults,rounds_fused,fleet,telemetry \
+    --only kernels,sharded,scenarios,compression,faults,rounds_fused,fleet,telemetry,serving \
     --quick
 python -m benchmarks.compare bench_results.csv benchmarks/baseline.json \
     --mode "${BENCH_GUARD:-hard}"

@@ -116,7 +116,16 @@ class FederatedDataset:
         blocks for the round-fused loop sees the same batches a
         round-at-a-time run would gather. ``client_ids`` are REGISTERED
         ids; the example gather maps them to physical partitions
-        (i % num_clients)."""
+        (i % num_clients).
+
+        BOTH draws are keyed on (seed, round) — the cohort through the
+        scheduler, the within-client example draw through a per-round
+        generator derived here — never on call history: a --resume
+        restarting at round T stages the exact batches the
+        uninterrupted run staged for T (the resume-parity tests in
+        tests/test_checkpoint.py / test_serving.py pin this; a stateful
+        stream would desync the moment the replayed prefix is
+        skipped)."""
         m = self.num_clients
         C = cohort_size(participation, self.registered_clients)
         t = self._round if round_idx is None else round_idx
@@ -124,12 +133,13 @@ class FederatedDataset:
             self._round += 1
         sch, key = self._scheduler(C)
         ids = np.asarray(sch.sample(key, t))
+        ex_rng = np.random.default_rng([self.seed + 17, int(t)])
         takes = []
         for i in ids:
             idx = self.clients[i % m]
-            take = self.rng.choice(idx, size=local_steps * batch_size,
-                                   replace=len(idx) < local_steps
-                                   * batch_size)
+            take = ex_rng.choice(idx, size=local_steps * batch_size,
+                                 replace=len(idx) < local_steps
+                                 * batch_size)
             takes.append(take.reshape(local_steps, batch_size))
         weights = self.client_sizes()[ids % m]
         return (np.stack(takes).astype(np.int32),

@@ -57,7 +57,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -249,9 +251,14 @@ def _run_fused(args, loop, state, rounds, stage_block, on_round,
 
     ``fleet_arena`` switches to the fleet carry
     (core.fed_loop.make_fleet_loop): the loop carries
-    (FlatFLState, ClientArena). Checkpoints still save only the FLState
-    half — a fleet --resume restarts the arena cold (η warm-starts and
-    participation counters reset; the global params/round do not).
+    (FlatFLState, ClientArena). Checkpoints save BOTH halves: the
+    FLState lands in ``--ckpt-dir`` and the arena in its ``arena/``
+    subdirectory (invisible to latest_step/GC of the FLState stream —
+    they match only ``step_*`` entries), keyed on the same round so a
+    --resume restores η warm-starts, participation counters, and the
+    EF21 slab along with the params (see _maybe_resume_arena; the
+    resume-parity test in tests/test_serving.py pins bit-exactness
+    across a mid-run restart).
 
     Observability (repro.telemetry): the block is the host-sync
     boundary — the ONLY host transfer per block is the single batched
@@ -339,6 +346,9 @@ def _run_fused(args, loop, state, rounds, stage_block, on_round,
             with spans.span("ckpt"):
                 boundary = unflatten_fl_state(fstate, layout)
                 save(args.ckpt_dir, boundary, step=int(boundary.round))
+                if car is not None:
+                    save(_arena_dir(args.ckpt_dir), car,
+                         step=int(boundary.round))
     if profile_round > 0 and not profiled:
         print(f"--profile {profile_round}: no block contained that "
               f"round (run is {rounds} rounds); no trace captured",
@@ -470,7 +480,14 @@ def train_lm(args):
     return state
 
 
-def _maybe_ckpt(args, state, t, final=False):
+def _arena_dir(ckpt_dir):
+    """Fleet-arena checkpoints live in a subdirectory of the FLState
+    checkpoint dir: latest_step/_gc only match ``step_*`` entries, so
+    the two streams never see each other."""
+    return os.path.join(ckpt_dir, "arena")
+
+
+def _maybe_ckpt(args, state, t, final=False, arena=None):
     """Periodic checkpoint, plus ALWAYS the final round: with
     ``T % ckpt_every != 0`` the last periodic save would otherwise
     predate round T and a --resume would silently redo (and a reader
@@ -480,10 +497,15 @@ def _maybe_ckpt(args, state, t, final=False):
     index: after a --resume the loop restarts at t=0 while the round
     counter continues, and loop-index steps would sort BELOW the
     pre-resume checkpoints — save()'s keep-newest GC would delete the
-    new saves and latest_step would restore stale pre-resume state."""
+    new saves and latest_step would restore stale pre-resume state.
+
+    ``arena`` (fleet runs) rides along into ``<ckpt_dir>/arena`` at the
+    same step, so warm per-client state survives a --resume."""
     if args.ckpt_dir and (t % args.ckpt_every == 0 or final):
         from repro.checkpoint import save
         save(args.ckpt_dir, state, step=int(state.round))
+        if arena is not None:
+            save(_arena_dir(args.ckpt_dir), arena, step=int(state.round))
 
 
 def _maybe_resume(args, state):
@@ -493,6 +515,31 @@ def _maybe_resume(args, state):
         print(f"resumed from checkpoint step {step} "
               f"(round {int(state.round)})")
     return state
+
+
+def _maybe_resume_arena(args, arena, round_):
+    """Restore the fleet arena saved alongside the FLState checkpoint
+    at round ``round_`` (the round _maybe_resume restored). Falls back
+    to the cold arena — with a warning — when the checkpoint predates
+    arena persistence or was saved by a non-fleet run; raises if the
+    arena on disk has a different shape (e.g. the run was resumed with
+    a different --num-registered or --error-feedback setting)."""
+    from repro.checkpoint import latest_step, restore
+    if not (args.ckpt_dir and args.resume):
+        return arena
+    adir = _arena_dir(args.ckpt_dir)
+    steps_seen = latest_step(adir)
+    if steps_seen is None:
+        return arena
+    if not os.path.isdir(os.path.join(adir, f"step_{round_:08d}")):
+        warnings.warn(f"no arena checkpoint at round {round_} under "
+                      f"{adir} (latest is {steps_seen}): resuming with "
+                      f"a cold arena — η warm-starts and participation "
+                      f"counters reset")
+        return arena
+    arena, step = restore(adir, like=arena, step=round_)
+    print(f"resumed fleet arena from step {step}")
+    return arena
 
 
 def train_paper_task(args):
@@ -570,6 +617,7 @@ def train_paper_task(args):
         car = arena_init(fl.registered_clients, eta0=loop.eta0,
                          ef_width=(loop.layout.padded_size if use_ef
                                    else None))
+        car = _maybe_resume_arena(args, car, int(state.round))
         arena = jax.tree.map(jnp.asarray, fed.arena())
 
         def stage_block(round0, n):
@@ -669,7 +717,7 @@ def train_paper_task(args):
     return state
 
 
-def main():
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default=None)
     ap.add_argument("--task", default=None,
@@ -762,6 +810,11 @@ def main():
                          "launch counts); needs --rounds-per-call > 1")
     ap.add_argument("--profile-dir", default="experiments/profile",
                     help="jax.profiler trace output directory")
+    return ap
+
+
+def main():
+    ap = build_parser()
     args = ap.parse_args()
     if args.profile and args.rounds_per_call <= 1:
         ap.error("--profile needs the round-fused engine: pass "

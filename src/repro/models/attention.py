@@ -187,14 +187,33 @@ def gqa_full(params, x, cfg, *, positions, window=None, build_cache=False,
     return y, cache
 
 
+def _cache_write(buf, val, slot, vec):
+    """Write one decode entry into a (B, W, ...) ring buffer.
+
+    Scalar ``slot``: the legacy lockstep write — every batch row stores
+    at the same index (dynamic_update_slice). Vector ``slot`` (B,): the
+    per-slot serving form — row b writes at its OWN index slot[b]."""
+    if vec:
+        return buf.at[jnp.arange(buf.shape[0]), slot].set(val[:, 0])
+    return jax.lax.dynamic_update_slice_in_dim(buf, val, slot, axis=1)
+
+
 def gqa_step(params, x, cfg, cache, *, t, slot, positions_buf, window=None):
     """One decode step. x: (B,1,D); cache k/v: (B,W,KV,hd) ring buffer.
 
     t: scalar absolute position of the new token. slot: write index in the
     ring buffer. positions_buf: (W,) absolute position of each slot (-1 =
     empty), already updated by the caller for this step.
+
+    Vectorized (continuous-batching) form: ``t``/``slot`` may be (B,)
+    int32 with ``positions_buf`` (B, W) — every batch row then decodes
+    at its OWN absolute position, writes its OWN ring slot, and masks
+    against its OWN position row (the serving engine's per-slot
+    sequence state). Scalar inputs take the original lockstep path
+    unchanged.
     """
     B = x.shape[0]
+    vec = jnp.ndim(t) > 0
     H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
@@ -202,35 +221,33 @@ def gqa_step(params, x, cfg, cache, *, t, slot, positions_buf, window=None):
     if cfg.qkv_bias:
         q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
     if cfg.rope_theta:
-        pos = jnp.full((B, 1), t, jnp.int32)
+        pos = t[:, None] if vec else jnp.full((B, 1), t, jnp.int32)
         q = apply_rope(q, pos, cfg.rope_theta)
         k = apply_rope(k, pos, cfg.rope_theta)
     quant = "k_scale" in cache
     if quant:
         kq, ks = _quantize(k)
         vq, vs = _quantize(v)
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, 1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, 1)
-        cks = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks,
-                                                  slot, 1)
-        cvs = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs,
-                                                  slot, 1)
+        ck = _cache_write(cache["k"], kq, slot, vec)
+        cv = _cache_write(cache["v"], vq, slot, vec)
+        cks = _cache_write(cache["k_scale"], ks, slot, vec)
+        cvs = _cache_write(cache["v_scale"], vs, slot, vec)
         kd = (ck.astype(jnp.float32)
               * cks.astype(jnp.float32)[..., None]).astype(k.dtype)
         vd = (cv.astype(jnp.float32)
               * cvs.astype(jnp.float32)[..., None]).astype(v.dtype)
         new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
     else:
-        kd = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot,
-                                                 axis=1)
-        vd = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot,
-                                                 axis=1)
+        kd = _cache_write(cache["k"], k, slot, vec)
+        vd = _cache_write(cache["v"], v, slot, vec)
         new_cache = {"k": kd, "v": vd}
-    valid = (positions_buf >= 0) & (positions_buf <= t)
+    tt = t[:, None] if vec else t
+    valid = (positions_buf >= 0) & (positions_buf <= tt)
     if window is not None:
-        valid &= (t - positions_buf) < window
+        valid &= (tt - positions_buf) < window
     qg = q.reshape(B, 1, KV, H // KV, hd)
-    mask = valid[None, None, None, None, :]
+    mask = (valid[:, None, None, None, :] if vec
+            else valid[None, None, None, None, :])
     out = _sdpa_masked(qg, kd, vd, mask).reshape(B, 1, H, hd)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
     return y, new_cache
@@ -293,8 +310,11 @@ def mla_full(params, x, cfg, *, positions, window=None, build_cache=False,
 def mla_step(params, x, cfg, cache, *, t, slot, positions_buf, window=None):
     """Absorbed decode form: attention runs directly against the latent cache
     (c_kv, k_rope) without expanding per-head K/V for the whole history —
-    the memory- and bandwidth-saving MLA inference trick."""
+    the memory- and bandwidth-saving MLA inference trick. Accepts the
+    same scalar (lockstep) or (B,)-vector (per-slot) ``t``/``slot`` as
+    :func:`gqa_step`."""
     B = x.shape[0]
+    vec = jnp.ndim(t) > 0
     H = cfg.num_heads
     dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
     kvr = cfg.kv_lora_rank
@@ -306,12 +326,11 @@ def mla_step(params, x, cfg, cache, *, t, slot, positions_buf, window=None):
     kv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
     c_new = rmsnorm(kv[..., :kvr], params["kv_norm"])        # (B,1,kvr)
     kr_new = kv[..., kvr:][:, :, None, :]
-    pos = jnp.full((B, 1), t, jnp.int32)
+    pos = t[:, None] if vec else jnp.full((B, 1), t, jnp.int32)
     q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
     kr_new = apply_rope(kr_new, pos, cfg.rope_theta)[:, :, 0, :]
-    c_kv = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_new, slot, 1)
-    k_rope = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], kr_new,
-                                                 slot, 1)
+    c_kv = _cache_write(cache["c_kv"], c_new, slot, vec)
+    k_rope = _cache_write(cache["k_rope"], kr_new, slot, vec)
     # absorb W_uk into the query: q_abs (B,H,kvr)
     q_abs = jnp.einsum("bshk,rhk->bhr", q_nope, params["wk_b"])
     scores = (jnp.einsum("bhr,btr->bht", q_abs.astype(jnp.float32),
@@ -319,10 +338,12 @@ def mla_step(params, x, cfg, cache, *, t, slot, positions_buf, window=None):
               + jnp.einsum("bshk,btk->bht", q_rope.astype(jnp.float32),
                            k_rope.astype(jnp.float32)))
     scores *= 1.0 / np.sqrt(dn + dr)
-    valid = (positions_buf >= 0) & (positions_buf <= t)
+    tt = t[:, None] if vec else t
+    valid = (positions_buf >= 0) & (positions_buf <= tt)
     if window is not None:
-        valid &= (t - positions_buf) < window
-    scores = jnp.where(valid[None, None, :], scores, NEG_INF)
+        valid &= (tt - positions_buf) < window
+    scores = jnp.where(valid[:, None, :] if vec else valid[None, None, :],
+                       scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)
     ctx = jnp.einsum("bht,btr->bhr", w, c_kv.astype(jnp.float32))
     out = jnp.einsum("bhr,rhk->bhk", ctx.astype(x.dtype), params["wv_b"])

@@ -255,16 +255,36 @@ class Model:
 
     def decode_step(self, params, cache, tokens, *, window=None):
         """tokens: (B,1) -> (logits (B,1,V), cache). ``window`` must match
-        the value used at prefill/init_cache (a static config, not state)."""
+        the value used at prefill/init_cache (a static config, not state).
+
+        Two cache forms, selected by ``cache["t"]``'s rank:
+          * scalar ``t`` + (W,) ``positions`` — the legacy LOCKSTEP
+            cache (every batch row at the same position; serve's fixed
+            batch, the decode-consistency tests);
+          * (B,) ``t`` + (B, W) ``positions`` — the PER-SLOT pool cache
+            (repro.serving.engine): each row decodes at its own
+            position/ring slot, so a continuous-batching pool can admit
+            and retire sequences independently per row.
+        """
         cfg = self.cfg
         t = cache["t"]
-        W = cache["positions"].shape[0]
+        vec = t.ndim > 0
+        W = cache["positions"].shape[-1]
         slot = (t % W).astype(jnp.int32)
-        positions_buf = cache["positions"].at[slot].set(t)
+        if vec:
+            rows = jnp.arange(t.shape[0])
+            positions_buf = cache["positions"].at[rows, slot].set(t)
+        else:
+            positions_buf = cache["positions"].at[slot].set(t)
         x = params["embed"][tokens]
         if not cfg.rope_theta:  # absolute sinusoidal positions (whisper)
             from repro.models.common import sinusoidal_position_at
-            x = x + sinusoidal_position_at(t, cfg.d_model).astype(x.dtype)
+            if vec:
+                pe = jax.vmap(
+                    lambda ti: sinusoidal_position_at(ti, cfg.d_model))(t)
+                x = x + pe[:, None, :].astype(x.dtype)
+            else:
+                x = x + sinusoidal_position_at(t, cfg.d_model).astype(x.dtype)
         enc_kv = cache.get("enc_kv")
         x, runs = tfm.stack_step(params["stack"], x, cfg,
                                  cache["runs"], t=t, slot=slot,

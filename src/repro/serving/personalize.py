@@ -1,0 +1,90 @@
+"""Personalized decode: serve a registered client's locally adapted
+delta as a low-cost overlay on the global params.
+
+À la *Locally Adaptive Federated Learning* (PAPERS.md): a client that
+participated in training carries local state the server already holds —
+in this repo, its row of the PR-7 client-state arena
+(``repro.federation.arena.ClientArena``), whose EF21 slab is exactly a
+per-client flat ``(N,)`` correction in the training layout. The overlay
+is one axpy on the packed buffer plus an unpack:
+
+    params_c = unpack(pack(params) + scale * delta_c, layout)
+
+so a personalized request costs O(N) — no per-client model copies live
+longer than the request group that needs them, and the decode engine
+reuses one compiled decode block for every overlay (params are traced
+arguments).
+
+``PersonalizationStore`` keys flat deltas by client id. Deltas come
+from ``ClientArena.ef`` rows (:meth:`from_arena`) or are set directly
+(:meth:`set_delta` accepts a params-shaped pytree or an already-flat
+vector). The engine gathers the overlay per request at admission and
+groups active slots by overlay identity per flush.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.flat import layout_of, pack, unpack
+
+
+class PersonalizationStore:
+    """Flat per-client param deltas over a serving template layout."""
+
+    def __init__(self, template_params: Any, *, scale: float = 1.0):
+        self.layout = layout_of(template_params)
+        self.scale = float(scale)
+        self._deltas: Dict[int, jnp.ndarray] = {}
+
+    # ------------------------------------------------------------- build
+    @classmethod
+    def from_arena(cls, arena, template_params: Any, *,
+                   client_ids: Optional[Iterable[int]] = None,
+                   scale: float = 1.0) -> "PersonalizationStore":
+        """Deltas from the fleet arena's EF21 slab: row i is registered
+        client i's flat correction in the training layout (which must
+        be the serving layout — same template tree). Clients without an
+        ``ef`` row (arena built without error feedback) cannot be
+        personalized this way."""
+        store = cls(template_params, scale=scale)
+        if arena.ef is None:
+            raise ValueError("arena has no EF21 slab (ef=None): train "
+                             "with --error-feedback to accumulate "
+                             "per-client deltas, or set_delta directly")
+        ef = np.asarray(arena.ef)
+        if ef.shape[1] != store.layout.padded_size:
+            raise ValueError(
+                f"arena EF width {ef.shape[1]} != serving layout "
+                f"padded_size {store.layout.padded_size}: the arena was "
+                f"trained on a different model than this template")
+        ids = (range(ef.shape[0]) if client_ids is None else client_ids)
+        for cid in ids:
+            store._deltas[int(cid)] = jnp.asarray(ef[int(cid)],
+                                                  jnp.float32)
+        return store
+
+    def set_delta(self, client_id: int, delta: Any) -> None:
+        """delta: params-shaped pytree or flat (padded_size,) vector."""
+        if hasattr(delta, "ndim") and delta.ndim == 1:
+            flat = jnp.asarray(delta, jnp.float32)
+            if flat.shape[0] != self.layout.padded_size:
+                raise ValueError(f"flat delta width {flat.shape[0]} != "
+                                 f"layout {self.layout.padded_size}")
+        else:
+            flat = pack(delta, self.layout)
+        self._deltas[int(client_id)] = flat
+
+    # ------------------------------------------------------------- query
+    def has(self, client_id) -> bool:
+        return client_id is not None and int(client_id) in self._deltas
+
+    def client_ids(self):
+        return sorted(self._deltas)
+
+    def overlay(self, params_flat: jnp.ndarray, client_id: int) -> Any:
+        """Global flat params + this client's scaled delta -> pytree."""
+        delta = self._deltas[int(client_id)]
+        return unpack(params_flat + self.scale * delta, self.layout)

@@ -1,0 +1,67 @@
+"""Round-versioned model registry: watch a training checkpoint dir and
+stage new params for the decode engine to hot-swap.
+
+The training driver saves FLState checkpoints keyed on the ROUND
+counter (``launch/train._maybe_ckpt`` / ``_run_fused``); the registry
+polls ``repro.checkpoint.latest_step`` and, whenever a round newer than
+the one currently serving appears, loads its params subtree through
+``restore_params`` (the ``params/`` manifest-prefix mapping, so
+training checkpoints serve directly) into a :class:`StagedVersion`.
+
+The registry only STAGES; the engine APPLIES. ``DecodeEngine.step``
+polls once per flush interval and swaps at the block boundary — params
+are never replaced while a decode block is in flight, which is what
+makes the swap atomic from a request's point of view (no token is ever
+produced from mixed-version params). ``StagedVersion.seen_at`` is
+stamped when the poll first notices the new checkpoint on disk; the
+engine's ``serve_swap_stall_s`` metric is the time from then until the
+staged params actually serve traffic (restore + wait-to-boundary).
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Any, NamedTuple, Optional
+
+from repro.checkpoint import latest_step, restore_params
+
+
+class StagedVersion(NamedTuple):
+    params: Any          # restored params pytree (serving template shapes)
+    step: int            # training round the checkpoint was keyed on
+    seen_at: float       # wall time the poll first saw the checkpoint
+
+
+class ModelRegistry:
+    """Poll-based checkpoint watcher; see module docstring.
+
+    ``template`` fixes the serving param shapes: every restore is
+    verified leaf-by-leaf against it (``restore_params`` raises on any
+    shape mismatch), so a staged version can always hot-swap into an
+    engine built from the same template.
+    """
+
+    def __init__(self, ckpt_dir: str, template: Any):
+        self.ckpt_dir = ckpt_dir
+        self.template = template
+        self.version: Optional[int] = None   # last step handed out
+        self.loads = 0
+
+    def poll(self) -> Optional[StagedVersion]:
+        """Stage the newest checkpoint round if it is newer than the
+        last one handed out; None when already current (or the dir is
+        still empty). Load errors from a half-written checkpoint cannot
+        occur: ``save`` publishes via atomic tmp-dir rename."""
+        step = latest_step(self.ckpt_dir)
+        if step is None or (self.version is not None
+                            and step <= self.version):
+            return None
+        seen_at = time.time()
+        params, step = restore_params(self.ckpt_dir, self.template,
+                                      step=step)
+        self.version = step
+        self.loads += 1
+        return StagedVersion(params=params, step=step, seen_at=seen_at)
+
+    def step_dir(self, step: int) -> str:
+        return os.path.join(self.ckpt_dir, f"step_{step:08d}")

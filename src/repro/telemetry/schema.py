@@ -214,3 +214,38 @@ register("eta_clip_count", producer=_TELE, unit="lanes",
 register("nan_guard_count", producer=_TELE, unit="clients",
          summaries=(("nan_guard_count", "sum"),),
          doc="absolute count of NaN-guard latches this round")
+
+_SERVE = "serving.engine"
+register("serve_tokens", dtype="i32", producer=_SERVE, unit="tokens",
+         summaries=(("serve_tokens_total", "sum"),),
+         doc="decode tokens emitted this flush interval (all slots, "
+             "after per-request budget truncation)")
+register("serve_occupancy", producer=_SERVE,
+         summaries=(("serve_occupancy_mean", "mean"),),
+         doc="active slots / pool slots at this flush (continuous-"
+             "batching utilization)")
+register("serve_version", dtype="i32", producer=_SERVE, unit="round",
+         summaries=(("serve_version_last", "max"),),
+         doc="training round of the params that produced every token "
+             "of this flush (hot-swaps land only at flush boundaries)")
+register("serve_swapped", dtype="i32", producer=_SERVE,
+         summaries=(("serve_swaps_total", "sum"),),
+         doc="1 when a staged checkpoint version hot-swapped in at "
+             "this flush boundary")
+register("serve_swap_stall_s", producer=_SERVE, unit="s",
+         summaries=(("serve_swap_stall_mean", "mean"),
+                    ("serve_swap_stall_max", "max")),
+         doc="registry-notice to traffic-serving delay of the swap "
+             "applied at this flush (restore + wait-to-boundary)")
+
+_LOADGEN = "serving.loadgen.run_load"
+register("serve_tok_per_s", producer=_LOADGEN, unit="tokens/s",
+         summaries=(("serve_tok_per_s", "max"),),
+         doc="load-generator end-to-end decode throughput")
+register("serve_latency_p50_s", producer=_LOADGEN, unit="s",
+         summaries=(("serve_latency_p50_s", "max"),),
+         doc="median request latency (submit to last token, queueing "
+             "included under poisson arrivals)")
+register("serve_latency_p99_s", producer=_LOADGEN, unit="s",
+         summaries=(("serve_latency_p99_s", "max"),),
+         doc="99th-percentile request latency")

@@ -85,6 +85,21 @@ def test_restore_params_key_mapping(tmp_path):
                        {**params, "extra": jnp.zeros((2,))})
 
 
+def test_serve_window_smaller_than_request_errors():
+    """Regression: a --window smaller than prompt+gen used to silently
+    clamp cache_len and truncate attention context. It must now refuse
+    loudly — and serve via a rolling ring buffer when the caller opts
+    in with --roll-cache."""
+    with pytest.raises(SystemExit, match="smaller than the full"):
+        run(_args("--window", "20"))
+    rolled = run(_args("--window", "20", "--roll-cache"))
+    assert rolled["tokens"].shape == (2, 8)
+    # a window that covers the request needs no opt-in and matches the
+    # unwindowed decode (nothing ever rolls out of a covering window)
+    full = run(_args("--window", "24"))
+    np.testing.assert_array_equal(full["tokens"], run(_args())["tokens"])
+
+
 @pytest.mark.slow
 def test_serve_decode_example_subprocess(tmp_path):
     """examples/serve_decode.py end to end: loads a checkpoint via
