@@ -1,0 +1,66 @@
+"""Per-module coverage table + soft floor over a coverage.json report.
+
+    python scripts/coverage_floor.py coverage.json
+
+Groups file coverage by top-level module under src/repro/ (core,
+federation, kernels, launch, ...; top-level files stand alone), prints
+the table worst-first, and checks the total line rate against the
+floor. The floor is SOFT by default — coverage regressions print a
+loud warning but do not fail CI (set REPRO_COV_HARD=1 to make it
+blocking once the number has been stable for a while).
+
+    REPRO_COV_FLOOR   total-percent floor (default 70)
+    REPRO_COV_HARD    "1" -> exit 1 when below the floor
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def module_of(path: str) -> str:
+    parts = path.replace("\\", "/").split("/")
+    if "repro" in parts:
+        sub = parts[parts.index("repro") + 1:]
+        return f"repro/{sub[0]}" if sub else "repro"
+    return parts[0]
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 1:
+        print(__doc__)
+        return 2
+    with open(argv[0]) as f:
+        report = json.load(f)
+
+    floor = float(os.environ.get("REPRO_COV_FLOOR", "70"))
+    hard = os.environ.get("REPRO_COV_HARD") == "1"
+
+    mods = {}
+    for path, entry in report["files"].items():
+        s = entry["summary"]
+        cov, tot = mods.setdefault(module_of(path), [0, 0])
+        mods[module_of(path)] = [cov + s["covered_lines"],
+                                 tot + s["num_statements"]]
+
+    rows = sorted(((100.0 * c / t if t else 100.0, m, c, t)
+                   for m, (c, t) in mods.items()))
+    width = max(len(m) for _, m, _, _ in rows)
+    print(f"{'module':<{width}}  covered/stmts   %")
+    for pct, mod, cov, tot in rows:
+        print(f"{mod:<{width}}  {cov:>6}/{tot:<6}  {pct:5.1f}")
+
+    total = report["totals"]["percent_covered"]
+    print(f"\ntotal: {total:.1f}% (floor {floor:.0f}%, "
+          f"{'hard' if hard else 'soft'})")
+    if total < floor:
+        print(f"WARNING: total coverage {total:.1f}% is below the "
+              f"{floor:.0f}% floor")
+        return 1 if hard else 0
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

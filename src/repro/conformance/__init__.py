@@ -1,0 +1,24 @@
+"""Conformance plane: the oracle registry, config-space differential
+fuzzer, greedy shrinker, replayable violation artifacts, and the
+checked-in regression corpus. See docs/TESTING.md for the workflow.
+
+    python -m repro.conformance.fuzz --seeds 10 --out artifacts/
+    python -m repro.conformance.replay artifacts/<violation>.json
+    python -m repro.conformance.corpus --regen
+"""
+from .harness import Harness, diff_trajectories
+from .kernels import KERNEL_MATRIX, KernelCell, cells_for, check_cell
+from .mutation import MUTATIONS, active_mutation
+from .oracles import ORACLES, Oracle, applicable
+from .runner import Violation, check_config, read_artifact, write_artifact
+from .shrink import shrink
+from .space import (DEFAULT, ConfPoint, ServePoint, invalid_reason,
+                    sample, shrink_candidates)
+
+__all__ = [
+    "ConfPoint", "ServePoint", "DEFAULT", "sample", "invalid_reason",
+    "shrink_candidates", "Harness", "diff_trajectories", "Oracle",
+    "ORACLES", "applicable", "KERNEL_MATRIX", "KernelCell", "cells_for",
+    "check_cell", "MUTATIONS", "active_mutation", "Violation",
+    "check_config", "write_artifact", "read_artifact", "shrink",
+]

@@ -1,0 +1,103 @@
+"""The checked-in regression corpus: a fixed set of seeded configs
+(``corpus.json`` next to this module) that runs green through every
+applicable oracle as a tier-1 test (tests/test_conformance.py). The
+corpus is the conformance plane's memory — any engine change that
+breaks an equivalence on ANY of these configs fails CI deterministically
+without needing a lucky fuzz seed.
+
+Regenerate (after deliberately widening the space) with:
+
+    python -m repro.conformance.corpus --regen
+
+which re-samples the standard seed block and re-appends the hand-picked
+structural entries (mesh, serving, resume-heavy) that random sampling
+only hits occasionally. The file is committed; regeneration must be a
+reviewed change, not a CI side effect.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import List, Tuple
+
+from .space import ConfPoint, ServePoint, invalid_reason, sample
+
+CORPUS_PATH = os.path.join(os.path.dirname(__file__), "corpus.json")
+
+# seeds sampled into the corpus (mesh/serve axes off: those engines get
+# dedicated hand-picked entries below so corpus cost stays bounded)
+_SAMPLED_SEEDS = tuple(range(22))
+
+# hand-picked structural entries the sampler only hits by luck
+_PINNED: Tuple[ConfPoint, ...] = (
+    # 8-device mesh: block shard_map vs replicated (+ all train oracles)
+    ConfPoint(seed=101, rounds=2, clients=4, local_steps=2, batch=2,
+              dim=24, bf16_dim=6, mesh=True),
+    ConfPoint(seed=102, rounds=2, clients=8, local_steps=1, batch=1,
+              dim=33, scenario="dirichlet_stragglers", mesh=True),
+    # serving: continuous batching vs isolated decode
+    ConfPoint(seed=103, serve=ServePoint(prompt_lens=(8, 5),
+                                         gens=(4, 6), slots=2,
+                                         cache_len=32, flush_tokens=4,
+                                         seed=7)),
+    ConfPoint(seed=104, serve=ServePoint(prompt_lens=(12, 7, 3),
+                                         gens=(5, 3, 6), slots=2,
+                                         cache_len=24, flush_tokens=3,
+                                         seed=11)),
+    # resume + adaptive server opt + EF compression, multi-round
+    ConfPoint(seed=105, rounds=4, clients=3, local_steps=2, batch=2,
+              dim=33, bf16_dim=18, server_opt="fedyogi",
+              scenario="zipf_async", compression="int8",
+              error_feedback=True),
+    ConfPoint(seed=106, rounds=3, clients=4, local_steps=3, batch=1,
+              dim=5, scenario="byzantine_async", robust_agg="trimmed",
+              quorum=2, compression="topk", k_frac=0.5,
+              error_feedback=True),
+)
+
+
+def generate() -> List[ConfPoint]:
+    cfgs = [sample(s, allow_mesh=False, allow_serve=False)
+            for s in _SAMPLED_SEEDS]
+    cfgs += list(_PINNED)
+    for c in cfgs:
+        bad = invalid_reason(c)
+        assert bad is None, f"corpus entry {c.label()} invalid: {bad}"
+    return cfgs
+
+
+def load() -> List[ConfPoint]:
+    with open(CORPUS_PATH) as f:
+        data = json.load(f)
+    return [ConfPoint.from_dict(d) for d in data["configs"]]
+
+
+def write(cfgs: List[ConfPoint], path: str = CORPUS_PATH) -> None:
+    data = {"version": 1, "configs": [c.to_dict() for c in cfgs]}
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def main(argv=None) -> int:
+    import argparse
+    p = argparse.ArgumentParser(
+        prog="python -m repro.conformance.corpus")
+    p.add_argument("--regen", action="store_true",
+                   help="rewrite corpus.json from the generator")
+    args = p.parse_args(argv)
+    if args.regen:
+        cfgs = generate()
+        write(cfgs)
+        print(f"wrote {len(cfgs)} configs to {CORPUS_PATH}")
+        return 0
+    cfgs = load()
+    for c in cfgs:
+        print(c.label(), json.dumps(dataclasses.asdict(c), default=str))
+    print(f"{len(cfgs)} configs")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

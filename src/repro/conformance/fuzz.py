@@ -1,0 +1,93 @@
+"""Budgeted config-space fuzzer CLI.
+
+    python -m repro.conformance.fuzz --seeds 10 --out artifacts/
+
+Samples one valid config per seed, runs every applicable oracle,
+shrinks violations to minimal repros, and writes one JSON artifact per
+violation plus a ``summary.json``. Exit status 1 iff any violation was
+found — the CI fuzz leg keys on this and uploads the artifact dir.
+
+``--mutation NAME`` (or env ``REPRO_CONFORMANCE_MUTATION``) installs a
+registered engine perturbation first — the teeth-test hook: with a
+mutation planted, the fuzzer MUST fail and its artifact MUST replay.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from .mutation import active_mutation
+from .runner import check_config, write_artifact
+from .space import sample
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.conformance.fuzz",
+        description="config-space differential fuzzer")
+    p.add_argument("--seeds", type=int, default=10,
+                   help="number of fuzz seeds (configs) to run")
+    p.add_argument("--start", type=int, default=0,
+                   help="first seed (seeds are start..start+seeds-1)")
+    p.add_argument("--out", default="conformance-artifacts",
+                   help="directory for violation artifacts + summary")
+    p.add_argument("--oracles", default=None,
+                   help="comma-separated oracle subset (default: all "
+                        "applicable)")
+    p.add_argument("--mutation", default=None,
+                   help="plant a registered engine mutation (teeth "
+                        "testing); env REPRO_CONFORMANCE_MUTATION")
+    p.add_argument("--no-shrink", action="store_true",
+                   help="report raw violating configs without shrinking")
+    p.add_argument("--shrink-budget", type=int, default=40,
+                   help="max differential evals per shrink")
+    p.add_argument("--no-mesh", action="store_true",
+                   help="never sample mesh configs")
+    p.add_argument("--no-serve", action="store_true",
+                   help="never sample serving configs")
+    return p
+
+
+def run(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    mutation = args.mutation or os.environ.get(
+        "REPRO_CONFORMANCE_MUTATION") or None
+    names = args.oracles.split(",") if args.oracles else None
+    seeds = range(args.start, args.start + args.seeds)
+    summary = {"seeds": list(seeds), "mutation": mutation,
+               "violations": [], "configs": {}}
+    n_viol = 0
+    with active_mutation(mutation):
+        for seed in seeds:
+            cfg = sample(seed, allow_mesh=not args.no_mesh,
+                         allow_serve=not args.no_serve)
+            summary["configs"][seed] = cfg.label()
+            violations = check_config(
+                cfg, oracle_names=names, do_shrink=not args.no_shrink,
+                shrink_budget=args.shrink_budget, mutation=mutation)
+            for v in violations:
+                n_viol += 1
+                path = write_artifact(args.out, v)
+                summary["violations"].append(
+                    {"seed": seed, "oracle": v.oracle,
+                     "artifact": path, "config": v.config.label(),
+                     "messages": v.messages[:3]})
+                print(f"VIOLATION seed={seed} oracle={v.oracle} "
+                      f"minimal={v.config.label()} -> {path}",
+                      file=sys.stderr)
+                for m in v.messages[:3]:
+                    print(f"  {m}", file=sys.stderr)
+            ok = "FAIL" if violations else "ok"
+            print(f"seed {seed}: {cfg.label()} ... {ok}")
+    os.makedirs(args.out, exist_ok=True)
+    with open(os.path.join(args.out, "summary.json"), "w") as f:
+        json.dump(summary, f, indent=2, sort_keys=True, default=str)
+    print(f"{len(list(seeds))} configs, {n_viol} violation(s)"
+          + (f" [mutation={mutation}]" if mutation else ""))
+    return 1 if n_viol else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(run())

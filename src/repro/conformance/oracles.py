@@ -1,0 +1,212 @@
+"""The oracle registry: every engine-equivalence invariant the repo's
+hand-written tests assert, lifted into a named ``Oracle`` with an
+explicit equivalence relation and an applicability predicate over
+``ConfPoint``s. The differential runner executes a config through every
+applicable oracle; the docs/ARCHITECTURE.md invariants table and this
+registry must stay in sync (docs/TESTING.md describes the workflow).
+
+| oracle                  | engines compared                 | relation |
+|-------------------------|----------------------------------|----------|
+| fused_vs_host           | make_fl_loop scan vs host rounds | bit-exact|
+| pallas_vs_xla           | flat pallas vs flat xla backend  | ≤1e-5    |
+| vmap_vs_flat            | legacy per-client vs flat engine | ≤1e-5    |
+| telemetry_on_off        | telemetry=True vs None           | bit-exact|
+| compression_none_inert  | inert spec vs no spec            | bit-exact|
+| fault_free_tail         | sync_iid preset vs scenario=None | bit-exact|
+| resume_vs_uninterrupted | ckpt save/restore mid-run vs not | bit-exact|
+| block_vs_replicated     | block shard_map vs un-meshed     | ≤1e-5    |
+| serve_pool_vs_isolated  | continuous batching vs isolated  | tokens ==|
+| kernel:<ns>             | pallas-interpret vs jnp ref      | per-cell |
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+from .harness import Harness, diff_trajectories
+from .kernels import NAMESPACES, cells_for, check_cell
+from .space import ConfPoint
+
+
+@dataclass(frozen=True)
+class Oracle:
+    name: str
+    description: str
+    relation: str                 # "bitexact" | "allclose" | "per-cell"
+    tol: float
+    applies: Callable[[ConfPoint], Optional[str]]  # None = applicable
+    run: Callable[[Harness], List[str]]            # violation strings
+
+    def check(self, harness: Harness) -> List[str]:
+        return [f"[{self.name}] {v}" for v in self.run(harness)]
+
+
+def _scn_of(cfg: ConfPoint):
+    from repro.federation import get_scenario
+    if cfg.scenario is None:
+        return None
+    ov = {}
+    if cfg.robust_agg is not None:
+        ov["robust_agg"] = cfg.robust_agg
+    if cfg.quorum is not None:
+        ov["quorum"] = cfg.quorum
+    return get_scenario(cfg.scenario, **ov)
+
+
+def _always(cfg: ConfPoint) -> Optional[str]:
+    return None
+
+
+def _needs_plain_sync(cfg: ConfPoint) -> Optional[str]:
+    if cfg.scenario is not None:
+        return "legacy per-client engine only covers scenario=None"
+    if cfg.compression != "none" or cfg.error_feedback:
+        return "compression requires the flat engine"
+    return None
+
+
+def _inert_compression_only(cfg: ConfPoint) -> Optional[str]:
+    if cfg.compression != "none" or cfg.error_feedback:
+        return "config's compression is already active"
+    return None
+
+
+def _scenario_free_only(cfg: ConfPoint) -> Optional[str]:
+    if cfg.scenario is not None:
+        return "legacy-tail comparison needs scenario=None as baseline"
+    return None
+
+
+def _multi_round_only(cfg: ConfPoint) -> Optional[str]:
+    if cfg.rounds < 2:
+        return "resume needs rounds >= 2"
+    return None
+
+
+def _mesh_ok(cfg: ConfPoint) -> Optional[str]:
+    import jax
+    if not cfg.mesh:
+        return "config has no mesh axis"
+    if jax.device_count() < 8:
+        return "needs >= 8 devices"
+    if cfg.compression != "none" or cfg.error_feedback:
+        return "block path compared uncompressed only (int8 tie-flips)"
+    scn = _scn_of(cfg)
+    if scn is not None:
+        if scn.faulty or scn.robust or scn.quorum > 0:
+            return "block_sharded rejects faults/robust/quorum"
+        if scn.bandwidth_heterogeneous:
+            return "bandwidth ladder excluded from the block oracle"
+    return None
+
+
+def _serve_only(cfg: ConfPoint) -> Optional[str]:
+    if cfg.serve is None:
+        return "config has no serve section"
+    return None
+
+
+def _fused_run(h: Harness) -> List[str]:
+    # scenario-free, fused and host rounds lower to the identical
+    # program (shared flat_body) — bit for bit. Scenario machinery
+    # (fault masks, async buffer conds) re-fuse differently inside a
+    # scan than in a per-round jit, drifting reductions at f32 eps.
+    bit = h.cfg.scenario is None
+    return diff_trajectories(h.host("xla"), h.fused("xla"),
+                             bitexact=bit, tol=0.0 if bit else 1e-5)
+
+
+def _telemetry_run(h: Harness) -> List[str]:
+    a, b = h.host("xla"), h.host("xla", telemetry=True)
+    state_keys = sorted(k for k in set(a) | set(b)
+                        if not k.startswith("met."))
+    met_keys = sorted(k for k in set(a) & set(b)
+                      if k.startswith("met."))
+    return (diff_trajectories(a, b, bitexact=True, keys=state_keys)
+            + diff_trajectories(a, b, bitexact=False, tol=1e-5,
+                                keys=met_keys))
+
+
+def _kernel_oracle(ns: str) -> Oracle:
+    cells = cells_for(ns)
+
+    def run(h: Harness) -> List[str]:
+        # one seed-selected cell per config: cheap per run, full matrix
+        # coverage across fuzz seeds (the parametrized test sweeps all)
+        cell = cells[h.cfg.seed % len(cells)]
+        return check_cell(cell, seed=h.cfg.seed)
+
+    return Oracle(
+        name=f"kernel:{ns}",
+        description=f"{ns} pallas-interpret == jnp ref on one "
+                    f"seed-selected matrix cell",
+        relation="per-cell", tol=0.0, applies=_always, run=run)
+
+
+ORACLES: Dict[str, Oracle] = {o.name: o for o in [
+    Oracle("fused_vs_host",
+           "R-round fused lax.scan == R host-loop rounds: bit for bit "
+           "scenario-free; ≤1e-5 under scenario machinery (fault/async "
+           "branches re-fuse differently inside the scan)",
+           "bitexact", 0.0, _always, _fused_run),
+    Oracle("pallas_vs_xla",
+           "flat engine, pallas-interpret kernels vs pure-XLA math",
+           "allclose", 1e-5, _always,
+           lambda h: diff_trajectories(h.host("xla"), h.host("pallas"),
+                                       bitexact=False, tol=1e-5)),
+    Oracle("vmap_vs_flat",
+           "legacy per-client (vmapped tree) engine vs packed flat "
+           "engine",
+           "allclose", 1e-5, _needs_plain_sync,
+           lambda h: diff_trajectories(h.tree_engine(), h.host("xla"),
+                                       bitexact=False, tol=1e-5)),
+    Oracle("telemetry_on_off",
+           "in-scan telemetry reads the trajectory, never perturbs it: "
+           "state bit-exact; shared metric rows ≤1e-5 (extra telemetry "
+           "ops can reorder XLA fusions of the metric reductions)",
+           "bitexact", 0.0, _always, _telemetry_run),
+    Oracle("compression_none_inert",
+           "an inert CompressionSpec (kind=none, no EF) lowers to the "
+           "exact no-compression program",
+           "bitexact", 0.0, _inert_compression_only,
+           lambda h: diff_trajectories(h.host("xla"),
+                                       h.host("xla",
+                                              compression="none"),
+                                       bitexact=True)),
+    Oracle("fault_free_tail",
+           "the sync_iid preset (zero fault rates, mean agg, no "
+           "quorum) takes the exact legacy round tail",
+           "bitexact", 0.0, _scenario_free_only,
+           lambda h: diff_trajectories(h.host("xla"),
+                                       h.host("xla",
+                                              scenario="sync_iid"),
+                                       bitexact=True)),
+    Oracle("resume_vs_uninterrupted",
+           "checkpoint save/restore at R//2 continues the exact "
+           "uninterrupted trajectory",
+           "bitexact", 0.0, _multi_round_only,
+           lambda h: diff_trajectories(h.host("xla"), h.resume("xla"),
+                                       bitexact=True)),
+    Oracle("block_vs_replicated",
+           "block-level shard_map fused loop vs the un-meshed fused "
+           "loop (final packed params)",
+           "allclose", 1e-5, _mesh_ok,
+           lambda h: diff_trajectories(h.replicated(), h.block(),
+                                       bitexact=False, tol=1e-5,
+                                       keys=["state.P"])),
+    Oracle("serve_pool_vs_isolated",
+           "continuous-batching decode == one-request-at-a-time greedy "
+           "decode, token for token",
+           "bitexact", 0.0, _serve_only,
+           lambda h: diff_trajectories(h.serve_pool(),
+                                       h.serve_isolated(),
+                                       bitexact=True)),
+] + [_kernel_oracle(ns) for ns in NAMESPACES]}
+
+
+def applicable(cfg: ConfPoint, names=None) -> List[Oracle]:
+    """The oracles a config must satisfy (optionally filtered by
+    name)."""
+    pool = ([ORACLES[n] for n in names] if names
+            else list(ORACLES.values()))
+    return [o for o in pool if o.applies(cfg) is None]

@@ -1,0 +1,72 @@
+"""Replay a conformance violation artifact.
+
+    python -m repro.conformance.replay artifact.json
+    python -m repro.conformance.replay artifact.json --ignore-mutation
+
+Reconstructs the minimal config from the artifact, re-installs the
+recorded engine mutation (if any — that is what makes fuzzer-teeth
+failures reproducible across processes), and re-runs the one oracle
+that failed. Exit 1 iff the violation reproduces; ``--ignore-mutation``
+re-runs against the pristine engines, which for a mutation-induced
+artifact must exit 0 — the control that proves the defect lives in the
+planted perturbation, not the conformance plane.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.conformance.replay",
+        description="replay a conformance violation artifact")
+    p.add_argument("artifact", help="violation JSON written by the "
+                                    "fuzzer/runner")
+    p.add_argument("--ignore-mutation", action="store_true",
+                   help="replay on pristine engines even if the "
+                        "artifact records a planted mutation")
+    p.add_argument("--original", action="store_true",
+                   help="replay the pre-shrink config instead of the "
+                        "minimal one")
+    return p
+
+
+def run(argv=None) -> int:
+    from .harness import Harness
+    from .mutation import active_mutation
+    from .oracles import ORACLES
+    from .runner import read_artifact
+    from .space import invalid_reason
+
+    args = build_parser().parse_args(argv)
+    v = read_artifact(args.artifact)
+    cfg = v.shrunk_from if args.original else v.config
+    oracle = ORACLES[v.oracle]
+    bad = invalid_reason(cfg)
+    if bad is not None:
+        print(f"artifact config is invalid: {bad}")
+        return 2
+    why_not = oracle.applies(cfg)
+    if why_not is not None:
+        print(f"oracle {oracle.name} does not apply: {why_not}")
+        return 2
+    mutation = None if args.ignore_mutation else v.mutation
+    print(f"replaying {oracle.name} on {cfg.label()}"
+          + (f" with mutation={mutation}" if mutation else ""))
+    with active_mutation(mutation):
+        try:
+            messages = oracle.check(Harness(cfg))
+        except Exception as e:  # noqa: BLE001 - crash counts as repro
+            messages = [f"[{oracle.name}] crashed: "
+                        f"{type(e).__name__}: {e}"]
+    if messages:
+        print("violation REPRODUCES:")
+        for m in messages:
+            print(f"  {m}")
+        return 1
+    print("violation does NOT reproduce (engines agree)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(run())

@@ -1,0 +1,104 @@
+"""Differential runner: execute a config through every applicable
+oracle, shrink violations to minimal repros, and emit them as JSON
+artifacts that ``python -m repro.conformance.replay`` re-runs from a
+fresh process. This is the engine under both the regression-corpus
+tier-1 test and the budgeted fuzz CI leg (repro.conformance.fuzz).
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from .oracles import ORACLES, applicable
+from .shrink import shrink as _shrink
+from .space import ConfPoint
+
+ARTIFACT_VERSION = 1
+
+
+@dataclass
+class Violation:
+    oracle: str
+    messages: List[str]
+    config: ConfPoint                   # minimal (shrunk) config
+    shrunk_from: ConfPoint              # the originally sampled config
+    shrink_evals: int = 0
+    mutation: Optional[str] = None
+    error: Optional[str] = None         # set when the run CRASHED
+
+    def to_artifact(self) -> dict:
+        o = ORACLES[self.oracle]
+        return {
+            "version": ARTIFACT_VERSION,
+            "oracle": self.oracle,
+            "relation": o.relation,
+            "tol": o.tol,
+            "messages": self.messages,
+            "config": self.config.to_dict(),
+            "shrunk_from": self.shrunk_from.to_dict(),
+            "shrink_evals": self.shrink_evals,
+            "mutation": self.mutation,
+            "error": self.error,
+        }
+
+    @classmethod
+    def from_artifact(cls, d: dict) -> "Violation":
+        return cls(oracle=d["oracle"], messages=list(d["messages"]),
+                   config=ConfPoint.from_dict(d["config"]),
+                   shrunk_from=ConfPoint.from_dict(d["shrunk_from"]),
+                   shrink_evals=int(d.get("shrink_evals", 0)),
+                   mutation=d.get("mutation"), error=d.get("error"))
+
+
+def check_config(cfg: ConfPoint, *, oracle_names=None,
+                 do_shrink: bool = True, shrink_budget: int = 40,
+                 mutation: Optional[str] = None) -> List[Violation]:
+    """All oracle violations for one config. Harness runs are memoised
+    per config, so the N applicable oracles share the baseline engine
+    runs. A crashing oracle is itself a finding (engines must RUN on
+    every valid config), reported with the exception text and not
+    shrunk."""
+    from .harness import Harness
+    harness = Harness(cfg)
+    out: List[Violation] = []
+    for oracle in applicable(cfg, oracle_names):
+        try:
+            messages = oracle.check(harness)
+            error = None
+        except Exception as e:  # noqa: BLE001 - crash IS the finding
+            messages = [f"[{oracle.name}] crashed: {type(e).__name__}: "
+                        f"{e}"]
+            error = f"{type(e).__name__}: {e}"
+        if not messages:
+            continue
+        minimal, evals = cfg, 0
+        if do_shrink and error is None:
+            minimal, evals = _shrink(cfg, oracle, budget=shrink_budget)
+            if minimal != cfg:
+                # re-run on the minimal config for its own messages
+                try:
+                    from .harness import Harness as H
+                    messages = oracle.check(H(minimal)) or messages
+                except Exception:
+                    pass
+        out.append(Violation(oracle=oracle.name, messages=messages,
+                             config=minimal, shrunk_from=cfg,
+                             shrink_evals=evals, mutation=mutation,
+                             error=error))
+    return out
+
+
+def write_artifact(out_dir: str, v: Violation) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{v.oracle.replace(':', '_')}-{v.config.label()}.json"
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        json.dump(v.to_artifact(), f, indent=2, sort_keys=True)
+    return path
+
+
+def read_artifact(path: str) -> Violation:
+    with open(path) as f:
+        return Violation.from_artifact(json.load(f))

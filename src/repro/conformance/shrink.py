@@ -1,0 +1,51 @@
+"""Greedy config shrinking: given a config that violates an oracle,
+walk ``space.shrink_candidates`` (one field toward the default point
+per candidate, structural axes first) and accept the FIRST candidate
+that still violates; restart from it until no candidate violates or
+the eval budget runs out. First-improvement greedy is the right trade
+here: every candidate evaluation is a full differential run, so we buy
+progress per eval rather than scanning the whole neighbourhood.
+
+A candidate counts only if it is valid AND the oracle still applies to
+it (shrinking must not escape the oracle's domain — dropping the mesh
+axis "fixes" a block-sharding violation vacuously). A candidate whose
+differential run CRASHES with a different outcome is skipped: we shrink
+the divergence we found, not whatever else small configs can break.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+from .space import ConfPoint, invalid_reason, shrink_candidates
+
+
+def _violates(oracle, cfg: ConfPoint) -> bool:
+    from .harness import Harness
+    try:
+        return bool(oracle.check(Harness(cfg)))
+    except Exception:
+        return False
+
+
+def shrink(cfg: ConfPoint, oracle, *,
+           budget: int = 40) -> Tuple[ConfPoint, int]:
+    """Minimal violating config for ``oracle``, starting from ``cfg``
+    (assumed violating). Returns ``(minimal, evals_spent)``."""
+    current = cfg
+    evals = 0
+    improved = True
+    while improved and evals < budget:
+        improved = False
+        for cand in shrink_candidates(current):
+            if evals >= budget:
+                break
+            if cand == current or invalid_reason(cand) is not None:
+                continue
+            if oracle.applies(cand) is not None:
+                continue
+            evals += 1
+            if _violates(oracle, cand):
+                current = cand
+                improved = True
+                break
+    return current, evals

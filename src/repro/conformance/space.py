@@ -1,0 +1,283 @@
+"""Config space for the conformance plane: the typed point, a seeded
+sampler over the FLConfig × Scenario × compression × faults × mesh ×
+engine cross-product, validity constraints, and the shrink ordering.
+
+A ``ConfPoint`` is the *entire* input of a differential run — problem
+shapes (quadratic dim, bf16 tail leaf, clients, local steps, rounds),
+the federation scenario and its fault/robust overrides, the delta-
+compression spec, the mesh axis, and an optional serving section
+(``ServePoint``). It is frozen, hashable, and JSON-round-trippable
+(``to_dict``/``from_dict``), which is what makes fuzz failures
+replayable artifacts (repro.conformance.replay).
+
+Everything here deliberately stays *small*: the oracles assert
+equivalences (bit-exact or ≤tol) between engines, which tiny shapes
+already witness — divergence amplitude is not the point, divergence
+EXISTENCE is. The pools include lane-unaligned dims (5, 33, 257-ish)
+on purpose: padding/tail-mask handling is where flat-buffer engines
+historically break.
+
+The shrink ordering (``shrink_candidates``) moves one field at a time
+toward ``DEFAULT`` — fewer rounds, fewer clients, fewer steps, smaller
+dims, then axis-by-axis config simplification — which is what the
+greedy shrinker (repro.conformance.shrink) walks to produce a minimal
+repro.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+# sampler pools — every value must keep a single oracle run in the
+# sub-second-compile regime on CPU
+ROUNDS_POOL = (1, 2, 3, 4)
+CLIENTS_POOL = (2, 3, 4, 8)
+STEPS_POOL = (1, 2, 3)
+BATCH_POOL = (1, 2, 4)
+DIM_POOL = (5, 8, 24, 33)          # incl. lane-unaligned dims
+BF16_POOL = (0, 6, 18)             # extra bf16 leaf width (0 = f32-only)
+SERVER_OPTS_POOL = ("fedavg", "fedavg", "fedavg", "fedavgm", "fedadam",
+                    "fedyogi")
+SCENARIO_POOL = (None, None, None, "sync_iid", "sync_dirichlet",
+                 "size_weighted", "dirichlet_stragglers", "cyclic_hetero",
+                 "zipf_async", "bandwidth_tiered", "dirichlet_dropouts",
+                 "byzantine_async")
+COMPRESSION_POOL = ("none", "none", "none", "int8", "topk")
+ROBUST_POOL = (None, None, None, "clip", "trimmed", "median")
+SERVE_PROMPTS_POOL = ((8, 5), (12, 7, 3), (6,))
+
+
+@dataclass(frozen=True)
+class ServePoint:
+    """Optional serving section: a continuous-batching decode workload
+    checked against one-request-at-a-time isolated decode (token
+    equality). ``arch`` is always reduced() to smoke scale."""
+    arch: str = "tinyllama-1.1b"
+    slots: int = 2
+    cache_len: int = 32
+    flush_tokens: int = 4
+    prompt_lens: Tuple[int, ...] = (8, 5)
+    gens: Tuple[int, ...] = (4, 6)
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class ConfPoint:
+    """One sampled configuration. Field defaults ARE the shrink target:
+    ``ConfPoint()`` is the smallest, most vanilla config the space
+    contains."""
+    seed: int = 0                  # data/init seed
+    rounds: int = 1                # R
+    clients: int = 2               # C (cohort per round)
+    local_steps: int = 1           # K
+    batch: int = 1                 # rows per micro-batch
+    dim: int = 5                   # quadratic dim D
+    bf16_dim: int = 0              # width of the extra bf16 leaf
+    server_opt: str = "fedavg"
+    weighted: bool = False
+    scenario: Optional[str] = None          # preset name
+    robust_agg: Optional[str] = None        # override onto the scenario
+    quorum: Optional[int] = None            # override onto the scenario
+    compression: str = "none"
+    k_frac: float = 0.25
+    error_feedback: bool = False
+    mesh: bool = False             # 8-device (4, 2) mesh oracles
+    serve: Optional[ServePoint] = None
+
+    # ---- JSON round trip -------------------------------------------------
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        if self.serve is not None:
+            d["serve"] = dataclasses.asdict(self.serve)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ConfPoint":
+        d = dict(d)
+        sv = d.get("serve")
+        if sv is not None:
+            sv = dict(sv)
+            for k in ("prompt_lens", "gens"):
+                if k in sv:
+                    sv[k] = tuple(sv[k])
+            d["serve"] = ServePoint(**sv)
+        return cls(**d)
+
+    def label(self) -> str:
+        """Short human id for logs/artifact filenames."""
+        bits = [f"s{self.seed}", f"R{self.rounds}", f"C{self.clients}",
+                f"K{self.local_steps}", f"D{self.dim}"]
+        if self.scenario:
+            bits.append(self.scenario)
+        if self.compression != "none" or self.error_feedback:
+            bits.append(self.compression + ("+ef" if self.error_feedback
+                                            else ""))
+        if self.robust_agg:
+            bits.append(self.robust_agg)
+        if self.mesh:
+            bits.append("mesh")
+        if self.serve is not None:
+            bits.append("serve")
+        return "-".join(bits)
+
+
+DEFAULT = ConfPoint()
+
+
+# --------------------------------------------------------------- validity
+def invalid_reason(cfg: ConfPoint) -> Optional[str]:
+    """None if ``cfg`` is a runnable point; else why not. The sampler
+    resamples invalid draws; the shrinker discards invalid candidates."""
+    if cfg.rounds < 1 or cfg.clients < 2 or cfg.local_steps < 1 \
+            or cfg.batch < 1 or cfg.dim < 2 or cfg.bf16_dim < 0:
+        return "degenerate shapes"
+    if cfg.rounds > 8 or cfg.clients > 16 or cfg.local_steps > 8 \
+            or cfg.dim > 128 or cfg.bf16_dim > 64:
+        return "shapes above the conformance budget"
+    if cfg.compression not in ("none", "int8", "topk"):
+        return f"unknown compression {cfg.compression!r}"
+    if not 0.0 < cfg.k_frac <= 1.0:
+        return f"k_frac {cfg.k_frac} outside (0, 1]"
+    if cfg.scenario is not None:
+        from repro.federation import SCENARIOS
+        if cfg.scenario not in SCENARIOS:
+            return f"unknown scenario {cfg.scenario!r}"
+        if SCENARIOS[cfg.scenario].registered_hint is not None:
+            return "fleet presets are out of conformance scope"
+    if cfg.robust_agg is not None and cfg.robust_agg not in (
+            "mean", "clip", "trimmed", "median"):
+        return f"unknown robust_agg {cfg.robust_agg!r}"
+    if cfg.scenario is None and (cfg.robust_agg is not None
+                                 or cfg.quorum is not None):
+        return "robust_agg/quorum overrides require a scenario"
+    if cfg.quorum is not None and not 0 <= cfg.quorum <= cfg.clients:
+        return "quorum outside [0, clients]"
+    if cfg.server_opt not in ("fedavg", "fedavgm", "fedadam", "fedyogi"):
+        return f"unknown server_opt {cfg.server_opt!r}"
+    if cfg.mesh and cfg.clients % 4:
+        return "mesh oracles shard clients 4-way: clients % 4 != 0"
+    if cfg.serve is not None:
+        s = cfg.serve
+        if len(s.prompt_lens) != len(s.gens) or not s.prompt_lens:
+            return "serve prompt_lens/gens length mismatch"
+        if s.cache_len < max(s.prompt_lens) + max(s.gens):
+            return "serve cache_len too small for prompt+gen"
+        if s.slots < 1 or s.flush_tokens < 1:
+            return "serve slots/flush_tokens < 1"
+    return None
+
+
+# ---------------------------------------------------------------- sampler
+def sample(seed: int, *, allow_mesh: bool = True,
+           allow_serve: bool = True) -> ConfPoint:
+    """Deterministic draw: seed -> one VALID ConfPoint. The draw seed is
+    recorded in ``ConfPoint.seed`` so the data/init randomness of the
+    differential runs varies with the fuzz seed too."""
+    rng = np.random.default_rng(np.uint64(seed))
+    for attempt in range(64):
+        cfg = _draw(rng, seed, allow_mesh=allow_mesh,
+                    allow_serve=allow_serve)
+        if invalid_reason(cfg) is None:
+            return cfg
+    # the pools make an invalid draw rare; fall back to the default point
+    return dataclasses.replace(DEFAULT, seed=seed)
+
+
+def _draw(rng: np.random.Generator, seed: int, *, allow_mesh: bool,
+          allow_serve: bool) -> ConfPoint:
+    def pick(pool):
+        return pool[int(rng.integers(len(pool)))]
+
+    compression = pick(COMPRESSION_POOL)
+    scenario = pick(SCENARIO_POOL)
+    serve = None
+    if allow_serve and rng.random() < 0.15:
+        pl = pick(SERVE_PROMPTS_POOL)
+        gens = tuple(int(g) for g in rng.integers(3, 8, len(pl)))
+        serve = ServePoint(prompt_lens=pl, gens=gens,
+                           cache_len=max(pl) + max(gens) + 8,
+                           slots=int(rng.integers(1, 4)),
+                           flush_tokens=int(rng.integers(2, 6)),
+                           seed=seed % 1009)
+    return ConfPoint(
+        seed=seed,
+        rounds=pick(ROUNDS_POOL),
+        clients=pick(CLIENTS_POOL),
+        local_steps=pick(STEPS_POOL),
+        batch=pick(BATCH_POOL),
+        dim=pick(DIM_POOL),
+        bf16_dim=pick(BF16_POOL),
+        server_opt=pick(SERVER_OPTS_POOL),
+        weighted=bool(rng.random() < 0.2),
+        scenario=scenario,
+        robust_agg=(pick(ROBUST_POOL) if scenario is not None else None),
+        quorum=(2 if (scenario is not None and rng.random() < 0.15)
+                else None),
+        compression=compression,
+        k_frac=float(pick((0.25, 0.25, 0.5, 1.0))),
+        error_feedback=bool(compression != "none" and rng.random() < 0.4),
+        mesh=bool(allow_mesh and rng.random() < 0.12),
+        serve=serve,
+    )
+
+
+# ---------------------------------------------------------------- shrink
+def shrink_candidates(cfg: ConfPoint):
+    """Yield one-field-toward-default neighbours, most-aggressive first
+    per field. The greedy shrinker accepts the first candidate that
+    still violates the oracle and restarts, so ordering = priority:
+    structural axes (serve/mesh/scenario/compression) first — removing a
+    whole axis shrinks the repro most — then the integer shape ladder.
+    """
+    def rep(**kw):
+        return dataclasses.replace(cfg, **kw)
+
+    if cfg.serve is not None:
+        s = cfg.serve
+        if len(s.prompt_lens) > 1:
+            yield rep(serve=dataclasses.replace(
+                s, prompt_lens=s.prompt_lens[:1], gens=s.gens[:1]))
+        if s.slots > 1:
+            yield rep(serve=dataclasses.replace(s, slots=1))
+        if s.gens and max(s.gens) > 3:
+            yield rep(serve=dataclasses.replace(
+                s, gens=tuple(min(g, 3) for g in s.gens)))
+    if cfg.mesh:
+        yield rep(mesh=False)
+    if cfg.error_feedback:
+        yield rep(error_feedback=False)
+    if cfg.compression != DEFAULT.compression:
+        yield rep(compression="none", error_feedback=False)
+    if cfg.k_frac != DEFAULT.k_frac:
+        yield rep(k_frac=DEFAULT.k_frac)
+    if cfg.robust_agg is not None:
+        yield rep(robust_agg=None)
+    if cfg.quorum is not None:
+        yield rep(quorum=None)
+    if cfg.scenario is not None:
+        yield rep(scenario=None, robust_agg=None, quorum=None)
+        if cfg.scenario != "sync_iid":
+            yield rep(scenario="sync_iid")
+    if cfg.weighted:
+        yield rep(weighted=False)
+    if cfg.server_opt != DEFAULT.server_opt:
+        yield rep(server_opt=DEFAULT.server_opt)
+    for field, pool in (("rounds", ROUNDS_POOL),
+                        ("clients", CLIENTS_POOL),
+                        ("local_steps", STEPS_POOL),
+                        ("batch", BATCH_POOL),
+                        ("dim", DIM_POOL),
+                        ("bf16_dim", BF16_POOL)):
+        cur = getattr(cfg, field)
+        lo = getattr(DEFAULT, field)
+        for v in sorted({v for v in pool if lo <= v < cur}):
+            yield rep(**{field: v})
+
+    if cfg.serve is not None and cfg.rounds == DEFAULT.rounds:
+        # last resort for train-oracle failures that kept a serve
+        # section around: drop it entirely (serve-oracle failures keep
+        # it — the shrinker filters candidates by oracle applicability)
+        yield rep(serve=None)

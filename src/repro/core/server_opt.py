@@ -47,8 +47,15 @@ def fedavgm(lr: float = 1.0, momentum: float = 0.9) -> ServerOpt:
 
 def _adaptive(name, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, yogi=False):
     def init(params):
-        return {"m": jax.tree.map(jnp.zeros_like, params),
-                "v": jax.tree.map(jnp.zeros_like, params),
+        # moments live in f32 regardless of param dtype: update()
+        # computes them from the f32-cast delta, so a zeros_like init
+        # on a bf16 leaf would change dtype after the first update —
+        # a trace-time type mismatch in every lax.cond/scan carry
+        # (async buffer flush, fused loop) on mixed-dtype trees.
+        def f32z(p):
+            return jnp.zeros(jnp.shape(p), jnp.float32)
+        return {"m": jax.tree.map(f32z, params),
+                "v": jax.tree.map(f32z, params),
                 "t": jnp.asarray(0, jnp.int32)}
 
     def update(params, mean, state):

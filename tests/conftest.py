@@ -25,6 +25,47 @@ import numpy as np
 import pytest
 
 
+def _order_seed():
+    raw = os.environ.get("PYTEST_ORDER_SEED", "")
+    if not raw:
+        return None
+    try:
+        return int(raw)
+    except ValueError:
+        import zlib
+        return zlib.crc32(raw.encode())
+
+
+def pytest_report_header(config):
+    seed = _order_seed()
+    if seed is not None:
+        return f"randomized test order: PYTEST_ORDER_SEED={seed}"
+    return None
+
+
+def pytest_collection_modifyitems(config, items):
+    # Deflake audit: PYTEST_ORDER_SEED=<n> deterministically shuffles
+    # the execution order — modules are permuted and items permuted
+    # within each module (grouping preserved so module-scoped fixtures
+    # set up once). Any pass/fail difference vs the default order is an
+    # inter-test dependency, i.e. a flake. CI's conformance job runs
+    # the fast tier this way with the run id as seed.
+    seed = _order_seed()
+    if seed is None:
+        return
+    shuffle_rng = np.random.default_rng(np.uint64(seed))
+    groups = {}
+    for item in items:
+        groups.setdefault(str(item.fspath), []).append(item)
+    keys = list(groups)
+    key_order = [keys[i] for i in shuffle_rng.permutation(len(keys))]
+    items[:] = [
+        groups[k][i]
+        for k in key_order
+        for i in shuffle_rng.permutation(len(groups[k]))
+    ]
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,272 @@
+"""Conformance plane (repro.conformance): the checked-in regression
+corpus runs green through every applicable oracle (tier-1), the sampler
+is deterministic and valid, the greedy shrinker minimizes toward the
+default point, violation artifacts round-trip through JSON, and — the
+teeth — a deliberately planted engine mutation is detected by the
+fuzzer, shrunk to the minimal config, and reproduced from the emitted
+artifact by ``python -m repro.conformance.replay`` in a fresh process
+(then vanishes under ``--ignore-mutation``)."""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import types
+
+import jax
+import pytest
+
+from repro.conformance import (DEFAULT, ConfPoint, Harness, ORACLES,
+                               ServePoint, Violation, active_mutation,
+                               applicable, check_config, invalid_reason,
+                               read_artifact, sample, shrink,
+                               write_artifact)
+from repro.conformance.corpus import generate, load
+
+_CORPUS = load()
+
+
+def _corpus_params():
+    out = []
+    for cfg in _CORPUS:
+        marks = []
+        if cfg.mesh or cfg.serve is not None:
+            marks.append(pytest.mark.slow)
+        if cfg.mesh:
+            marks.append(pytest.mark.skipif(
+                jax.device_count() < 8, reason="needs >= 8 devices"))
+        out.append(pytest.param(cfg, id=cfg.label(), marks=marks))
+    return out
+
+
+# ----------------------------------------------------------------- corpus
+def test_corpus_is_generator_output():
+    """corpus.json == the generator: regeneration is a reviewed change,
+    never silent drift."""
+    assert [c.to_dict() for c in _CORPUS] \
+        == [c.to_dict() for c in generate()]
+
+
+def test_corpus_size_and_validity():
+    assert len(_CORPUS) >= 25
+    for cfg in _CORPUS:
+        assert invalid_reason(cfg) is None, cfg.label()
+        # every corpus entry must exercise at least the universal
+        # train oracles
+        assert len(applicable(cfg)) >= (1 if cfg.serve is not None
+                                        else 8), cfg.label()
+
+
+@pytest.mark.parametrize("cfg", _corpus_params())
+def test_corpus_config_green(cfg):
+    """Tier-1 regression gate: every corpus config satisfies every
+    applicable oracle on the pristine engines."""
+    violations = check_config(cfg, do_shrink=False)
+    assert not violations, "\n".join(
+        m for v in violations for m in v.messages)
+
+
+# ---------------------------------------------------------------- sampler
+def test_sampler_deterministic_and_valid():
+    for seed in range(120):
+        a = sample(seed)
+        assert a == sample(seed)
+        assert invalid_reason(a) is None, (seed, a.label())
+    # the space actually varies across its axes
+    drawn = [sample(s) for s in range(120)]
+    assert {c.compression for c in drawn} == {"none", "int8", "topk"}
+    assert len({c.scenario for c in drawn}) >= 6
+    assert {c.server_opt for c in drawn} >= {"fedavg", "fedadam"}
+    assert any(c.mesh for c in drawn)
+    assert any(c.serve is not None for c in drawn)
+
+
+def test_confpoint_json_roundtrip():
+    # force a serve section so the tuple fields go through JSON too
+    cfg = dataclasses.replace(sample(7), serve=ServePoint())
+    assert ConfPoint.from_dict(cfg.to_dict()) == cfg
+    # through actual JSON text, tuples and all
+    assert ConfPoint.from_dict(json.loads(json.dumps(cfg.to_dict()))) \
+        == cfg
+
+
+def test_invalid_reasons():
+    assert invalid_reason(DEFAULT) is None
+    bad = [
+        dataclasses.replace(DEFAULT, clients=1),
+        dataclasses.replace(DEFAULT, compression="fp4"),
+        dataclasses.replace(DEFAULT, scenario="no_such_preset"),
+        dataclasses.replace(DEFAULT, scenario="fleet_uniform"),
+        dataclasses.replace(DEFAULT, robust_agg="clip"),  # no scenario
+        dataclasses.replace(DEFAULT, mesh=True, clients=3),
+        dataclasses.replace(DEFAULT, serve=ServePoint(cache_len=4)),
+    ]
+    for cfg in bad:
+        assert invalid_reason(cfg) is not None, cfg
+
+
+# ----------------------------------------------------------------- shrink
+def test_shrink_greedy_toward_default():
+    """Synthetic oracle (no engine runs): violation iff dim >= 8 and
+    rounds >= 2. The shrinker must land exactly on the smallest
+    violating point with every other axis at its default."""
+    start = dataclasses.replace(
+        DEFAULT, seed=3, rounds=4, clients=8, local_steps=3, batch=4,
+        dim=33, bf16_dim=18, server_opt="fedyogi", weighted=True,
+        scenario="zipf_async", compression="int8", error_feedback=True)
+    oracle = types.SimpleNamespace(
+        applies=lambda c: None,
+        check=lambda h: (["bad"] if h.cfg.dim >= 8 and h.cfg.rounds >= 2
+                         else []))
+    minimal, evals = shrink(start, oracle, budget=100)
+    assert minimal == dataclasses.replace(DEFAULT, seed=3, rounds=2,
+                                          dim=8)
+    assert 0 < evals <= 100
+
+
+def test_shrink_respects_oracle_domain():
+    """A shrink candidate the oracle does not apply to is never
+    accepted (dropping the axis would 'fix' the violation vacuously)."""
+    start = dataclasses.replace(DEFAULT, seed=1, rounds=3, clients=8)
+    oracle = types.SimpleNamespace(
+        applies=lambda c: None if c.rounds >= 2 else "needs rounds>=2",
+        check=lambda h: ["bad"])
+    minimal, _ = shrink(start, oracle, budget=50)
+    assert minimal.rounds == 2        # not 1: the oracle's floor
+    assert minimal.clients == DEFAULT.clients
+
+
+# -------------------------------------------------------------- artifacts
+def test_artifact_roundtrip(tmp_path):
+    v = Violation(oracle="pallas_vs_xla", messages=["m1", "m2"],
+                  config=dataclasses.replace(DEFAULT, seed=9),
+                  shrunk_from=sample(9), shrink_evals=5,
+                  mutation="delta_sgd.pallas_apply:1e-3")
+    path = write_artifact(str(tmp_path), v)
+    back = read_artifact(path)
+    assert back == v
+    data = json.loads(open(path).read())
+    assert data["relation"] == "allclose" and data["tol"] == 1e-5
+
+
+def test_replay_nonviolating_artifact_exits_zero(tmp_path):
+    """An artifact whose config satisfies the oracle replays to exit
+    0 — the green path the corpus-replay CI leg relies on."""
+    from repro.conformance import replay as replay_mod
+    v = Violation(oracle="fused_vs_host", messages=["stale"],
+                  config=dataclasses.replace(DEFAULT, seed=2),
+                  shrunk_from=dataclasses.replace(DEFAULT, seed=2))
+    path = write_artifact(str(tmp_path), v)
+    assert replay_mod.run([path]) == 0
+
+
+def test_replay_rejects_inapplicable_oracle(tmp_path):
+    from repro.conformance import replay as replay_mod
+    v = Violation(oracle="serve_pool_vs_isolated", messages=["x"],
+                  config=DEFAULT, shrunk_from=DEFAULT)
+    path = write_artifact(str(tmp_path), v)
+    assert replay_mod.run([path]) == 2
+
+
+# ---------------------------------------------------------------- oracles
+def test_oracle_applicability_partitions():
+    cfg = DEFAULT
+    names = {o.name for o in applicable(cfg)}
+    assert "fused_vs_host" in names and "pallas_vs_xla" in names
+    assert "serve_pool_vs_isolated" not in names     # no serve section
+    assert "block_vs_replicated" not in names        # no mesh
+    assert "resume_vs_uninterrupted" not in names    # rounds < 2
+    cfg2 = dataclasses.replace(cfg, rounds=2, mesh=True, clients=4)
+    names2 = {o.name for o in applicable(cfg2)}
+    assert "resume_vs_uninterrupted" in names2
+    if jax.device_count() >= 8:
+        assert "block_vs_replicated" in names2
+
+
+def test_every_registered_oracle_has_direction():
+    for o in ORACLES.values():
+        assert o.relation in ("bitexact", "allclose", "per-cell")
+        assert o.description
+
+
+# --------------------------------------------------------- mutation teeth
+def test_mutation_context_installs_and_restores():
+    from repro.kernels.delta_sgd import delta_sgd as dk
+    orig = dk.batched_apply
+    with active_mutation("delta_sgd.pallas_apply:1e-3"):
+        assert dk.batched_apply is not orig
+    assert dk.batched_apply is orig
+    with pytest.raises(KeyError, match="unknown mutation"):
+        with active_mutation("no_such_mutation"):
+            pass
+
+
+def test_kernel_oracle_catches_telemetry_mutation():
+    """The off-by-one histogram mutation is invisible to trajectories
+    but must trip the kernel:telemetry parity cells."""
+    cfg = ConfPoint(seed=0)      # seed 0 selects a hist cell
+    oracle = ORACLES["kernel:telemetry"]
+    assert oracle.check(Harness(cfg)) == []
+    with active_mutation("telemetry.hist_offbyone"):
+        assert oracle.check(Harness(cfg))
+
+
+@pytest.mark.slow
+def test_fuzzer_teeth_detect_shrink_replay(tmp_path):
+    """Acceptance: a planted epsilon perturbation in the pallas engine
+    is (1) detected by the differential fuzzer within the CI seed
+    budget, (2) shrunk to the minimal config — every structural axis
+    stripped — and (3) reproduced from the emitted JSON artifact by
+    ``python -m repro.conformance.replay`` in a fresh process, which
+    then exits 0 under --ignore-mutation (the defect lives in the
+    mutation, not the plane)."""
+    mutation = "delta_sgd.pallas_apply:1e-3"
+    start = sample(4, allow_mesh=False, allow_serve=False)
+    assert start != dataclasses.replace(DEFAULT, seed=4)  # shrink work
+    with active_mutation(mutation):
+        violations = check_config(start,
+                                  oracle_names=["pallas_vs_xla"],
+                                  do_shrink=True, shrink_budget=40,
+                                  mutation=mutation)
+    assert len(violations) == 1
+    v = violations[0]
+    assert v.oracle == "pallas_vs_xla"
+    # minimal: greedy shrink stripped every axis back to the default
+    assert v.config == dataclasses.replace(DEFAULT, seed=4)
+    assert v.shrunk_from == start and v.shrink_evals > 0
+
+    path = write_artifact(str(tmp_path), v)
+    env = dict(os.environ,
+               PYTHONPATH="src" + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r1 = subprocess.run(
+        [sys.executable, "-m", "repro.conformance.replay", path],
+        cwd=repo, env=env, capture_output=True, text=True, timeout=300)
+    assert r1.returncode == 1, r1.stdout + r1.stderr
+    assert "REPRODUCES" in r1.stdout
+    r2 = subprocess.run(
+        [sys.executable, "-m", "repro.conformance.replay", path,
+         "--ignore-mutation"],
+        cwd=repo, env=env, capture_output=True, text=True, timeout=300)
+    assert r2.returncode == 0, r2.stdout + r2.stderr
+
+
+# --------------------------------------------------- found-by-fuzzing lock
+def test_adaptive_server_async_bf16_runs():
+    """Regression for a bug THIS plane found on first contact: adaptive
+    server opts initialized moments with zeros_like(params), so a bf16
+    leaf flipped the moment dtype after the first update — a trace-time
+    lax.cond type mismatch in the async buffer flush (and a scan-carry
+    mismatch in the fused loop). Locked by corpus entry s105 and here
+    by the smallest failing shape."""
+    cfg = dataclasses.replace(DEFAULT, rounds=2, bf16_dim=6,
+                              server_opt="fedyogi",
+                              scenario="zipf_async")
+    assert invalid_reason(cfg) is None
+    h = Harness(cfg)
+    h.host("xla")      # crashed at trace time before the fix
+    h.fused("xla")
+    violations = check_config(cfg, oracle_names=["resume_vs_uninterrupted"],
+                              do_shrink=False)
+    assert all(v.error is None for v in violations), violations

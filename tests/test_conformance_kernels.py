@@ -1,0 +1,35 @@
+"""Table-driven kernel parity matrix: every cell of
+``repro.conformance.kernels.KERNEL_MATRIX`` — all six Pallas kernel
+namespaces, across dtype × shape — checked pallas-interpret against its
+pure-jnp reference in one parametrized test. The same table backs the
+``kernel:<ns>`` conformance oracles, which run one seed-selected cell
+per fuzzed config; this test is the exhaustive sweep."""
+import pytest
+
+from repro.conformance import KERNEL_MATRIX, cells_for, check_cell
+from repro.conformance.kernels import NAMESPACES
+
+
+def test_matrix_covers_every_namespace():
+    assert {c.ns for c in KERNEL_MATRIX} == set(NAMESPACES)
+    for ns in NAMESPACES:
+        assert len(cells_for(ns)) >= 2, ns
+    keys = [c.key for c in KERNEL_MATRIX]
+    assert len(keys) == len(set(keys))      # cell ids are unique
+
+
+@pytest.mark.parametrize(
+    "cell", KERNEL_MATRIX, ids=[c.key for c in KERNEL_MATRIX])
+def test_kernel_cell_parity(cell):
+    violations = check_cell(cell, seed=0)
+    assert not violations, "\n".join(violations)
+
+
+@pytest.mark.parametrize("seed", [1, 2])
+def test_kernel_cells_parity_other_seeds(seed):
+    """The matrix holds on fresh data too — one cell per namespace so
+    the sweep stays cheap."""
+    for ns in NAMESPACES:
+        cells = cells_for(ns)
+        cell = cells[seed % len(cells)]
+        assert check_cell(cell, seed=seed) == [], cell.key

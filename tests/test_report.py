@@ -1,0 +1,108 @@
+"""repro.launch.report — formatting helpers, cohort/scenario report
+aggregation (registry-driven via repro.telemetry.schema), the η-hist
+ASCII renderer, and the markdown tables, all on synthetic artifacts
+(no training runs)."""
+import json
+
+import numpy as np
+
+from repro.launch.report import (cohort_histogram, dryrun_table,
+                                 eta_hist_render, fmt_b, fmt_t, load,
+                                 roofline_table, scenario_summary,
+                                 scenario_table)
+
+
+def test_fmt_t_units():
+    assert fmt_t(0) == "0"
+    assert fmt_t(5e-6) == "5µs"
+    assert fmt_t(0.0123) == "12.3ms"
+    assert fmt_t(2.5) == "2.50s"
+
+
+def test_fmt_b_units():
+    assert fmt_b(512) == "512B"
+    assert fmt_b(2_000) == "2.0KB"
+    assert fmt_b(3_500_000) == "3.5MB"
+    assert fmt_b(7e9) == "7.0GB"
+    assert fmt_b(1.2e12) == "1.2TB"
+
+
+def test_cohort_histogram_counts_repeats():
+    h = cohort_histogram([[0, 1], [1, 3], [1, 1]], num_clients=5)
+    assert h.tolist() == [1, 4, 0, 1, 0]
+
+
+def test_scenario_summary_participation_and_metrics():
+    ids = [[0, 1], [0, 2], [0, 1]]
+    mets = [{"k_eff_mean": 1.0, "loss": 0.5},
+            {"k_eff_mean": 3.0, "loss": 0.4}]
+    out = scenario_summary("sync_iid", ids, num_clients=4,
+                           metrics_per_round=mets)
+    assert out["scenario"] == "sync_iid" and out["rounds"] == 2
+    assert out["clients_seen"] == 3
+    assert out["cohort_top1_share"] == 0.5          # client 0: 3 of 6
+    assert out["cohort_histogram"] == [3, 2, 1, 0]
+    # registry-driven: k_eff_mean declares a mean summary in the schema
+    assert out["k_eff_mean"] == 2.0
+
+
+def test_scenario_summary_vector_metric_and_edges():
+    hist = [1.0] * 16
+    out = scenario_summary(
+        "zipf_async", [], num_clients=2,
+        metrics_per_round=[{"eta_hist": hist}, {"eta_hist": hist}])
+    assert out["eta_hist"] == [2.0] * 16             # summed elementwise
+    assert len(out["eta_hist_edges"]) == 17          # B bins -> B+1 edges
+    # fleet regime: raw per-client histogram suppressed above 10k
+    big = scenario_summary("fleet", [[0]], num_clients=20_000,
+                           metrics_per_round=[])
+    assert "cohort_histogram" not in big
+    assert big["clients_seen"] == 1
+
+
+def test_eta_hist_render():
+    edges = [0.0, 1e-3, 1e-2, 1e-1, float("inf")]
+    text = eta_hist_render([2, 8, 4, 1], edges, width=8)
+    lines = text.splitlines()
+    assert "15 client-rounds" in lines[0]
+    assert len(lines) == 5
+    assert lines[1].startswith("  <") and lines[-1].lstrip().startswith(">")
+    assert lines[2].count("#") == 8                  # peak bin fills width
+    assert eta_hist_render([0, 0], edges) == "(empty η histogram)"
+
+
+def test_scenario_table_degrades_over_missing_keys():
+    rows = [{"scenario": "sync_iid", "rounds": 2, "clients_seen": 3,
+             "cohort_top1_share": 0.5, "cohort_top5_share": 1.0,
+             "stale_mean": 0.25, "stale_max": 2.0, "flush_rate": 0.75},
+            {"scenario": "bare"}]                    # everything missing
+    t = scenario_table(rows)
+    assert "sync_iid" in t and "0.50/1.00" in t and "0.25/2" in t
+    assert "| bare |" in t and " - " in t
+    assert scenario_table([{}]) == "(no scenario artifacts)"
+
+
+def test_dryrun_and_roofline_tables():
+    rows = [{"arch": "tinyllama-1.1b", "shape": "b1s128", "mesh": "16x16",
+             "federation": "dp", "clients": 8, "compile_s": 3.2,
+             "memory": {"temp_size_in_bytes": 2_000_000},
+             "analytic_memory": {"total": 4e9},
+             "useful_flops_ratio": 0.61,
+             "roofline": {"t_compute_s": 1e-3, "t_memory_s": 2e-3,
+                          "t_collective_s": 5e-4, "bottleneck": "memory",
+                          "coll_by_kind": {"all-reduce": 1e6}}},
+            {"arch": "partial"}]                     # degraded artifact
+    d = dryrun_table(rows)
+    assert "tinyllama-1.1b" in d and "2.0MB" in d and "4.0GB" in d
+    assert "| partial |" in d
+    r = roofline_table(rows)
+    assert "**memory**" in r and "all-reduce (1.0MB)" in r
+    assert "0.61" in r
+    # non-16x16 and note-only artifacts are filtered out
+    assert "partial" not in r
+
+
+def test_load_reads_sorted_json(tmp_path):
+    (tmp_path / "b.json").write_text(json.dumps({"n": 2}))
+    (tmp_path / "a.json").write_text(json.dumps({"n": 1}))
+    assert [r["n"] for r in load(str(tmp_path))] == [1, 2]

@@ -1,0 +1,125 @@
+"""repro.roofline — HLO collective parsing, ring-transfer wire-byte
+model, the three roofline terms, and affine-in-depth extrapolation.
+These run on synthetic HLO text and hand-built Roofline objects, so
+they cover the module without compiling a model."""
+import numpy as np
+import pytest
+
+from repro.roofline import (CollectiveOp, HBM_BW, ICI_BW, PEAK_FLOPS,
+                            Roofline, analyze, extrapolate, model_flops,
+                            memory_analysis_summary, parse_collectives)
+
+HLO = """\
+ENTRY main {
+  %ar = f32[1024,8]{1,0} all-reduce(%p0), replica_groups=[4,8]
+  %ag = bf16[256]{0} all-gather(%p1), replica_groups={{0,1,2,3}}
+  %rs = f32[64,2]{1,0} reduce-scatter(%p2), replica_groups=[2,16]
+  %aa = f32[128]{0} all-to-all(%p3), replica_groups={{0,1}}
+  %cp = f32[32]{0} collective-permute(%p4)
+  %tup = (f32[16]{0}, bf16[8]{0}) all-reduce-start(%p5), replica_groups=[1,2]
+  %mm = f32[4,4]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_parse_collectives_kinds_and_groups():
+    ops = parse_collectives(HLO)
+    assert [o.kind for o in ops] == [
+        "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+        "collective-permute", "all-reduce"]
+    ar, ag, rs, aa, cp, tup = ops
+    assert ar.bytes == 1024 * 8 * 4 and ar.group_size == 8
+    assert ag.bytes == 256 * 2 and ag.group_size == 4   # explicit list
+    assert rs.group_size == 16
+    assert aa.bytes == 128 * 4 and aa.group_size == 2
+    assert cp.group_size == 2                            # 0 -> floor 2
+    # tuple-shaped result: bytes summed across the tuple elements
+    assert tup.bytes == 16 * 4 + 8 * 2 and tup.group_size == 2
+
+
+def test_parse_collectives_ignores_non_collectives():
+    assert parse_collectives("  %x = f32[8]{0} add(%a, %b)\n") == []
+
+
+def test_wire_bytes_ring_model():
+    assert CollectiveOp("all-reduce", 1000, 4).wire_bytes \
+        == pytest.approx(2 * 3 / 4 * 1000)
+    assert CollectiveOp("all-gather", 1000, 4).wire_bytes \
+        == pytest.approx(3 / 4 * 1000)
+    assert CollectiveOp("reduce-scatter", 1000, 8).wire_bytes \
+        == pytest.approx(7 / 8 * 1000)
+    assert CollectiveOp("collective-permute", 1000, 4).wire_bytes == 1000
+    # degenerate group clamps to 2, never divides by zero
+    assert CollectiveOp("all-reduce", 1000, 0).wire_bytes \
+        == pytest.approx(1000.0)
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(flops=PEAK_FLOPS, hbm_bytes=HBM_BW / 2,
+                 coll_bytes=ICI_BW / 4, chips=4)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(0.5)
+    assert r.t_collective == pytest.approx(0.25)
+    assert r.bottleneck == "compute"
+    # whole-program (not per-partition) numbers divide by chips
+    r2 = Roofline(flops=PEAK_FLOPS, hbm_bytes=0, coll_bytes=0, chips=4,
+                  per_device=False)
+    assert r2.t_compute == pytest.approx(0.25)
+    s = r.summary()
+    assert s["bottleneck"] == "compute"
+    assert s["t_compute_s"] == pytest.approx(1.0)
+
+
+def test_analyze_from_fake_compiled():
+    class FakeCompiled:
+        def cost_analysis(self):
+            return [{"flops": 10.0, "bytes accessed": 20.0}]
+
+        def as_text(self):
+            return HLO
+
+    r = analyze(FakeCompiled(), chips=4)
+    assert r.flops == 10.0 and r.hbm_bytes == 20.0
+    assert set(r.coll_by_kind) == {"all-reduce", "all-gather",
+                                   "reduce-scatter", "all-to-all",
+                                   "collective-permute"}
+    assert r.coll_bytes == pytest.approx(
+        sum(r.coll_by_kind.values()))
+
+
+def test_extrapolate_affine_in_depth():
+    r1 = Roofline(flops=10.0, hbm_bytes=100.0, coll_bytes=4.0, chips=2,
+                  coll_by_kind={"all-reduce": 4.0})
+    r2 = Roofline(flops=16.0, hbm_bytes=140.0, coll_bytes=6.0, chips=2,
+                  coll_by_kind={"all-reduce": 4.0, "all-gather": 2.0})
+    r = extrapolate(r1, r2, l1=1, l2=2, L=10)
+    # fixed + L*layer: layer = r2 - r1, fixed = r1 - layer
+    assert r.flops == pytest.approx(10 + 6 * 9)
+    assert r.hbm_bytes == pytest.approx(100 + 40 * 9)
+    assert r.coll_by_kind["all-gather"] == pytest.approx(2 * 9)
+    # negative extrapolations clamp at 0
+    r3 = Roofline(flops=10.0, hbm_bytes=0, coll_bytes=0, chips=2)
+    r4 = Roofline(flops=5.0, hbm_bytes=0, coll_bytes=0, chips=2)
+    assert extrapolate(r3, r4, 1, 2, 10).flops == 0.0
+
+
+def test_model_flops_dense_rule():
+    from repro.configs import get_config
+    cfg = get_config("tinyllama-1.1b")
+    n = cfg.active_param_count()
+    assert model_flops(cfg, tokens=1000) == pytest.approx(6.0 * n * 1000)
+
+
+def test_memory_analysis_summary_partial_attrs():
+    class FakeMA:
+        argument_size_in_bytes = 128
+        temp_size_in_bytes = 64
+        # output/generated_code absent on purpose
+
+    class FakeCompiled:
+        def memory_analysis(self):
+            return FakeMA()
+
+    out = memory_analysis_summary(FakeCompiled())
+    assert out == {"argument_size_in_bytes": 128,
+                   "temp_size_in_bytes": 64}
